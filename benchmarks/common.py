@@ -1,0 +1,120 @@
+"""Shared scenario builders for the paper-table benchmarks.
+
+The paper's CIFAR/FMNIST experiments are reproduced on synthetic suites
+(see DESIGN.md §8) at CPU-budget scale: what is validated is each
+table/figure's *claim* (method orderings, trends), not absolute accuracy.
+Every benchmark prints the scaled-down numbers next to the claim check.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FedConfig, run_federated
+from repro.core.schedules import make_plan
+from repro.data.federated import FederatedData, build_federated
+from repro.data.partition import (budget_law, partition_classes,
+                                  partition_gamma, two_group_budget)
+from repro.data.synthetic import Dataset, make_dataset, train_test_split
+from repro.models.simple import Classifier, make_classifier
+
+# scaled-down defaults (paper: N=8, T=400, K=3 epochs, CIFAR-10)
+SILO_N = 8
+SILO_ROUNDS = 80
+SILO_K = 5
+DEVICE_N = 40          # paper: 100
+DEVICE_ROUNDS = 60     # paper: 400
+SEEDS = (0, 1)
+
+
+@dataclass
+class Scenario:
+    model: Classifier
+    fd: FederatedData
+    x_test: jnp.ndarray
+    y_test: jnp.ndarray
+    p: np.ndarray
+    ds_train: Dataset
+
+
+def cross_silo(gamma: float, *, beta: int = 4, n=SILO_N, seed: int = 0,
+               dataset: str = "teacher", model: str = "mlp",
+               width: int = 8) -> Scenario:
+    """Table-I style: N silos, γ-heterogeneity, budget law p=(1/2)^⌊βi/N⌋."""
+    ds = make_dataset(dataset, n=2048, dim=24, n_classes=8, seed=seed)
+    tr, te = train_test_split(ds, seed=seed)
+    parts = partition_gamma(tr, n, gamma=gamma, seed=seed)
+    fd = build_federated(tr, parts)
+    m = make_classifier(model, input_shape=tr.x.shape[1:], n_classes=8,
+                        width=width)
+    return Scenario(m, fd, jnp.asarray(te.x), jnp.asarray(te.y),
+                    budget_law(n, beta), tr)
+
+
+def cross_device(*, n=DEVICE_N, classes_per_client: int = 2, beta: int = 4,
+                 seed: int = 0, width: int = 8) -> Scenario:
+    """Table-II style: N devices, 2 classes each, random budget levels."""
+    ds = make_dataset("gaussian", n=4000, dim=24, n_classes=8, seed=seed)
+    tr, te = train_test_split(ds, seed=seed)
+    parts = partition_classes(tr, n, classes_per_client, seed=seed)
+    fd = build_federated(tr, parts)
+    m = make_classifier("mlp", input_shape=tr.x.shape[1:], n_classes=8,
+                        width=width)
+    rng = np.random.default_rng(seed)
+    p = rng.permutation(budget_law(n, beta))
+    return Scenario(m, fd, jnp.asarray(te.x), jnp.asarray(te.y), p, tr)
+
+
+def two_group(r: float, w: int, gamma: float = 0.1,
+              seed: int = 0) -> Scenario:
+    sc = cross_silo(gamma, seed=seed)
+    return Scenario(sc.model, sc.fd, sc.x_test, sc.y_test,
+                    two_group_budget(SILO_N, r, w), sc.ds_train)
+
+
+def run_cell(sc: Scenario, strategy: str, schedule: str, *, rounds: int,
+             local_steps: int = SILO_K, participation: float = 1.0,
+             lr: float = 0.1, batch: int = 32, seed: int = 0,
+             tau: int = 0, probe_client=None):
+    """One (method × schedule) cell. Returns (final_acc, metrics)."""
+    if strategy == "fedavg_full":
+        plan = make_plan("full", np.ones_like(sc.p), rounds,
+                         participation_ratio=participation, seed=seed)
+        fed_strategy = "fedavg"
+    elif strategy == "fedavg_dropout":
+        plan = make_plan("dropout", sc.p, rounds,
+                         participation_ratio=participation, seed=seed)
+        fed_strategy = "dropout"
+    else:
+        plan = make_plan(schedule, sc.p, rounds,
+                         participation_ratio=participation, seed=seed)
+        fed_strategy = strategy
+    fed = FedConfig(strategy=fed_strategy, local_steps=local_steps,
+                    batch_size=batch, lr=lr, seed=seed,
+                    tau=tau if tau else 100)
+    state, metrics = run_federated(
+        sc.model, sc.fd, fed, plan, x_test=sc.x_test, y_test=sc.y_test,
+        eval_every=max(10, rounds // 4), probe_client=probe_client)
+    return metrics.last("test_acc"), metrics
+
+
+def mean_over_seeds(fn, seeds=SEEDS):
+    vals = [fn(s) for s in seeds]
+    return float(np.mean(vals)), float(np.std(vals))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+
+def csv_line(name: str, seconds: float, derived: str) -> str:
+    us = seconds * 1e6
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,36 @@
+"""Fig. 5 — CC-FedAvg performance over the (r, W) grid.
+
+Claims: performance is essentially stable in r and W except when both are
+extreme (r=1, W=16 degrades sharply — most updates are guesses from stale
+information); moderate (r, W) costs almost nothing.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, csv_line, run_cell, two_group
+
+GRID = ((0.5, 2), (0.5, 8), (1.0, 2), (1.0, 16))
+
+
+def run() -> list[str]:
+    lines = []
+    with Timer() as t_all:
+        base_sc = two_group(0.0, 1, seed=0)
+        base, _ = run_cell(base_sc, "fedavg_full", "adhoc", rounds=80,
+                           seed=0)
+        res = {}
+        for r, w in GRID:
+            sc = two_group(r, w, seed=0)
+            acc, _ = run_cell(sc, "cc", "adhoc", rounds=80, seed=0)
+            res[(r, w)] = acc
+    mild = [res[(0.5, 2)], res[(0.5, 8)], res[(1.0, 2)]]
+    extreme = res[(1.0, 16)]
+    ok = (min(mild) >= base - 0.07) and (extreme <= min(mild) + 0.02)
+    for (r, w), acc in res.items():
+        lines.append(csv_line(f"fig5_r{r}_W{w}",
+                              t_all.seconds / (len(GRID) + 1),
+                              f"acc={acc:.3f};fedavg={base:.3f}"))
+    lines.append(csv_line(
+        "fig5_rw_claim", t_all.seconds,
+        f"mild_min={min(mild):.3f};extreme_r1W16={extreme:.3f};"
+        f"fedavg={base:.3f};claim={'PASS' if ok else 'FAIL'}"))
+    return lines

@@ -1,0 +1,39 @@
+"""Fig. 6 — computation-efficient FL: CC-FedAvg(r=1) vs FedAvg at equal
+compute (§V, §VI-F).
+
+Equal-compute comparison: CC-FedAvg(r=1, W) for T rounds performs T/W
+rounds' worth of gradient work — compare against FedAvg run for T/W
+rounds. Claims: for moderate W (≤4) CC-FedAvg(r=1) ≥ FedAvg(T/W); the
+synchronized-skip schedule (≈FedOpt) is much worse than ad-hoc.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, csv_line, run_cell, two_group
+
+T = 80
+WS = (2, 4)
+
+
+def run() -> list[str]:
+    lines = []
+    with Timer() as t_all:
+        res = {}
+        for w in WS:
+            sc = two_group(1.0, w, seed=0)
+            cc, _ = run_cell(sc, "cc", "adhoc", rounds=T, seed=0)
+            fa, _ = run_cell(sc, "fedavg_full", "adhoc", rounds=T // w,
+                             seed=0)
+            sync, _ = run_cell(sc, "cc", "sync", rounds=T, seed=0)
+            res[w] = (cc, fa, sync)
+    ok = all(res[w][0] >= res[w][1] - 0.03 for w in WS) and \
+        all(res[w][2] <= res[w][0] + 0.02 for w in WS)
+    for w in WS:
+        cc, fa, sync = res[w]
+        lines.append(csv_line(
+            f"fig6_W{w}", t_all.seconds / len(WS),
+            f"cc_r1_T{T}={cc:.3f};fedavg_T{T // w}={fa:.3f};"
+            f"sync_fedopt_like={sync:.3f}"))
+    lines.append(csv_line(
+        "fig6_efficiency_claim", t_all.seconds,
+        f"claim={'PASS' if ok else 'FAIL'}"))
+    return lines

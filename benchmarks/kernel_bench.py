@@ -1,0 +1,48 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU: these
+numbers measure the reference semantics, not TPU runtime — the TPU story
+is in §Roofline) plus their jnp oracles for relative sanity."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> list[str]:
+    lines = []
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 8, 512, 64))
+    kk = jax.random.normal(k, (1, 2, 512, 64))
+    v = jax.random.normal(k, (1, 2, 512, 64))
+    t_ref = _bench(lambda: ref.flash_attention_ref(q, kk, v, causal=True))
+    lines.append(csv_line("kernel_flash_ref_512", t_ref, "oracle"))
+    a = jax.random.uniform(k, (4, 1024, 256), minval=0.5, maxval=0.99)
+    b = jax.random.normal(k, (4, 1024, 256))
+    h0 = jnp.zeros((4, 256))
+    t_scan = _bench(lambda: ops.rglru_scan(a, b, h0))
+    t_scan_ref = _bench(lambda: ref.rglru_scan_ref(a, b, h0))
+    lines.append(csv_line("kernel_rglru_pallas_interp", t_scan,
+                          f"ref_s={t_scan_ref:.4f}"))
+    loc = jax.random.normal(k, (8, 1 << 16))
+    de = jax.random.normal(k, (8, 1 << 16))
+    g = jax.random.normal(k, (1 << 16,))
+    tm = jnp.ones((8,))
+    t_cc = _bench(lambda: ops.cc_delta_update(loc, de, g, tm, tm))
+    t_cc_ref = _bench(lambda: ref.cc_delta_update_ref(loc, de, g, tm, tm))
+    lines.append(csv_line("kernel_cc_update_pallas_interp", t_cc,
+                          f"ref_s={t_cc_ref:.4f}"))
+    return lines

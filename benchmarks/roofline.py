@@ -1,0 +1,51 @@
+"""Roofline table (deliverable g) — reads the dry-run JSON records and
+emits one CSV line per (arch × shape × mesh) with the three terms, the
+dominant bottleneck, and the useful-FLOPs ratio. Source of EXPERIMENTS.md
+§Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Timer, csv_line
+
+RESULT_DIRS = ("results/dryrun_1pod_opt", "results/dryrun_2pod_opt",
+               "results/dryrun_ccround_opt", "results/perf")
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for d in RESULT_DIRS:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(f) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def run() -> list[str]:
+    with Timer() as t:
+        recs = load_records()
+    lines = []
+    n_ok = 0
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(csv_line(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0,
+                f"FAILED:{r.get('error', '?')[:60]}"))
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        step = "" if r.get("step") in ("auto", None) \
+            else "_" + r["step"].replace("round", "")
+        lines.append(csv_line(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}{step}",
+            t.seconds / max(1, len(recs)),
+            f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+            f"collective_s={rf['collective_s']:.4f};"
+            f"bottleneck={rf['bottleneck']};"
+            f"useful_flops={r.get('useful_flops_ratio', 0):.3f}"))
+    lines.append(csv_line("roofline_summary", t.seconds,
+                          f"records_ok={n_ok}/{len(recs)}"))
+    return lines

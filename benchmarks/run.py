@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure plus the roofline
+table from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run fig2 table1 # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = (
+    "fig2_estimation",
+    "table1_cross_silo",
+    "table2_cross_device",
+    "fig3_convergence",
+    "fig4_fednova",
+    "fig5_rw_grid",
+    "fig6_efficiency",
+    "table3_ccc",
+    "table45_skewed",
+    "kernel_bench",
+    "roofline",
+)
+
+
+def main() -> None:
+    import importlib
+
+    want = sys.argv[1:]
+    mods = [m for m in MODULES
+            if not want or any(w in m for w in want)]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

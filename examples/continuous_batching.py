@@ -1,0 +1,67 @@
+"""Continuous-batching serving demo: a stream of variable-length requests
+flows through the slot-based scheduler; the decode batch shape stays
+fixed (jit compiles once) while slots retire and back-fill — the
+production inner loop behind the decode_32k dry-run shape.
+
+    PYTHONPATH=src python examples/continuous_batching.py \
+        [--arch qwen3-1.7b] [--slots 3] [--requests 7]
+"""
+import argparse
+import time
+
+import jax
+
+from repro import configs as cfglib
+from repro.models import decoder
+from repro.serving import BatchingServer, Request
+from repro.utils.logging import log
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    choices=cfglib.ARCH_NAMES)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=7)
+    ap.add_argument("--gen", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = cfglib.get_config(args.arch, reduced=True)
+    rng = jax.random.PRNGKey(0)
+    params = decoder.model_init(rng, cfg)
+    srv = BatchingServer(cfg, params, n_slots=args.slots, capacity=96)
+
+    reqs = []
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.fold_in(rng, i),
+                                    (8 + 3 * i,), 0, cfg.vocab)
+        r = Request(uid=i, prompt=prompt,
+                    max_new_tokens=args.gen + (i % 3))
+        reqs.append(r)
+        srv.submit(r)
+
+    log(f"{args.requests} requests → {args.slots} slots "
+        f"({args.arch}, reduced)")
+    t0 = time.time()
+    step = 0
+    while srv.queue or any(a is not None for a in srv.active):
+        n_active = srv.step()
+        step += 1
+        if step % 4 == 1:
+            slots = ["·" if a is None else str(a.uid)
+                     for a in srv.active]
+            log(f"step {step:3d}  slots=[{' '.join(slots)}] "
+                f"queued={len(srv.queue)} active={n_active}")
+    dt = time.time() - t0
+    total_toks = sum(len(r.generated) for r in reqs)
+    assert all(r.done for r in reqs)
+    log(f"served {total_toks} tokens across {args.requests} requests in "
+        f"{step} decode steps ({1e3 * dt / max(1, step):.0f} ms/step); "
+        f"fixed batch shape -> single compile.")
+    for r in reqs[:3]:
+        log(f"request {r.uid}: prompt_len={r.prompt.shape[-1]} "
+            f"-> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

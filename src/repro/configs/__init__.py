@@ -1,0 +1,135 @@
+"""Architecture registry + ShapeDtypeStruct input specs.
+
+``get_config(name)`` returns the exact assigned configuration (full scale —
+only the dry-run touches these); ``get_config(name, reduced=True)`` returns
+the CPU-runnable smoke variant of the same family.
+
+``input_specs(cfg, shape)`` builds weak-type-correct
+:class:`jax.ShapeDtypeStruct` stand-ins for every input of the step the
+shape exercises (train → ``train_step`` batch, prefill → prompt batch,
+decode → (tokens, t, caches)). No device memory is allocated.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, ArchConfig, InputShape
+
+_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "musicgen-large": "musicgen_large",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "xlstm-125m": "xlstm_125m",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+}
+
+ARCH_NAMES: tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(name: str, *, reduced: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+# ---------------------------------------------------------------------------
+# shape applicability (DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+
+def is_subquadratic(cfg: ArchConfig) -> bool:
+    """True if every attention block is windowed or recurrent."""
+    kinds = cfg.block_kinds()
+    full_attn = [k for k in kinds if k in ("attn", "mla", "mrope")]
+    return not full_attn
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> int:
+    """force_window for the given decode shape (0 = arch-native)."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        if cfg.long_context_window <= 0:
+            raise ValueError(
+                f"{cfg.name}: long_500k needs sub-quadratic attention; set "
+                "long_context_window for full-attention archs")
+        return cfg.long_context_window
+    return 0
+
+
+def shape_supported(cfg: ArchConfig, shape: InputShape) -> bool:
+    """All 40 pairs lower; full-attention archs use the sliding-window
+    carve-out for long_500k (cfg.long_context_window)."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return cfg.long_context_window > 0
+    return True
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs
+# ---------------------------------------------------------------------------
+
+
+def _token_spec(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.n_codebooks:
+        return jax.ShapeDtypeStruct((batch, cfg.n_codebooks, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Spec for one train/prefill batch dict (the modality stubs included)."""
+    specs = {"tokens": _token_spec(cfg, batch, seq)}
+    if cfg.n_vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+        specs["pos3"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    elif cfg.mrope_sections:
+        specs["pos3"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, capacity: int,
+                force_window: int = 0):
+    """Decode-cache pytree as ShapeDtypeStructs (via eval_shape)."""
+    from repro.models import decoder
+
+    return jax.eval_shape(
+        lambda: decoder.init_caches(cfg, batch, capacity,
+                                    force_window=force_window))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape | str) -> dict:
+    """All inputs of the step this shape lowers, as ShapeDtypeStructs.
+
+    train / prefill → ``{"batch": {...}}``;
+    decode          → ``{"tokens", "t", "caches"}`` (1 new token vs a
+    ``seq_len``-token KV cache, ring-buffered down to the window for
+    windowed attention).
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, b, s)}
+    fw = decode_window(cfg, shape)
+    capacity = s
+    tok = (jax.ShapeDtypeStruct((b, cfg.n_codebooks, 1), jnp.int32)
+           if cfg.n_codebooks else jax.ShapeDtypeStruct((b, 1), jnp.int32))
+    return {
+        "tokens": tok,
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": cache_specs(cfg, b, capacity, force_window=fw),
+    }

@@ -1,0 +1,25 @@
+"""MiniCPM3-4B — dense decoder with MLA [hf:openbmb/MiniCPM3-4B].
+
+Pool line: 62L d_model=2560 40H (GQA kv=40) d_ff=6400 vocab=73448 — MLA.
+MLA dims follow the model card: q_lora_rank=768, kv_lora_rank=256,
+qk_nope=64, qk_rope=32, v_head_dim=64 (head_dim = nope+rope = 96).
+"""
+from repro.models.config import ArchConfig, MLAConfig, Segment
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b",
+    arch_type="dense",
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=96,                 # qk_nope + qk_rope
+    d_ff=6400,
+    vocab=73448,
+    segments=(Segment(repeat=62, pattern=("mla",)),),
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                  qk_rope_dim=32, v_head_dim=64, absorb=True),
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    long_context_window=8192,
+    citation="hf:openbmb/MiniCPM3-4B (MLA per DeepSeek-V2, arXiv:2405.04434)",
+)

@@ -1,0 +1,26 @@
+"""Mixtral-8x22B — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088].
+
+Pool line: 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8e top-2, SWA. Window 4096 per the Mistral design the pool line tags.
+SWA makes long_500k natively sub-quadratic (no carve-out needed).
+"""
+from repro.models.config import ArchConfig, MoEConfig, Segment
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=32768,
+    segments=(Segment(repeat=56, pattern=("swa",)),),
+    ffn_kind="moe",
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384),
+    sliding_window=4096,
+    rope_theta=1000000.0,
+    tie_embeddings=False,
+    citation="arXiv:2401.04088 (Mixtral of Experts)",
+)

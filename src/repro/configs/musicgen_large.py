@@ -1,0 +1,26 @@
+"""MusicGen-large — decoder-only LM over EnCodec tokens [arXiv:2306.05284].
+
+Pool line: 48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048.
+4 EnCodec codebook streams; embeddings are summed per codebook and the
+model carries 4 parallel LM heads (delay-pattern bookkeeping lives in the
+data pipeline). The EnCodec codec itself is the allowed frontend stub.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=2048,
+    segments=(Segment(repeat=48, pattern=("attn",)),),
+    n_codebooks=4,
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    long_context_window=8192,
+    kv_cache_dtype="float8_e4m3fn",   # 32k x 128 MHA cache exceeds HBM in bf16
+    citation="arXiv:2306.05284 (Simple and Controllable Music Generation)",
+)

@@ -1,0 +1,22 @@
+"""Phi-3-mini-3.8B — dense RoPE+SwiGLU decoder [arXiv:2404.14219].
+
+Pool line: 32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="phi3-mini-3.8b",
+    arch_type="dense",
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab=32064,
+    segments=(Segment(repeat=32, pattern=("attn",)),),
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    long_context_window=8192,
+    kv_cache_dtype="float8_e4m3fn",   # 32k x 128 MHA cache exceeds HBM in bf16
+    citation="arXiv:2404.14219 (Phi-3 Technical Report)",
+)

@@ -1,0 +1,27 @@
+"""Qwen2-VL-7B — VLM decoder with M-RoPE [arXiv:2409.12191].
+
+Pool line: 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064 —
+M-RoPE, dynamic resolution. mrope half-dim sections (16, 24, 24) sum to
+head_dim//2 = 64 (temporal/height/width), matching the model card.
+The ViT vision tower is the allowed frontend stub: ``input_specs`` supplies
+precomputed patch embeddings + 3-row position ids.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab=152064,
+    segments=(Segment(repeat=28, pattern=("mrope",)),),
+    mrope_sections=(16, 24, 24),
+    n_vision_tokens=256,
+    rope_theta=1000000.0,
+    tie_embeddings=False,
+    long_context_window=8192,
+    citation="arXiv:2409.12191 (Qwen2-VL)",
+)

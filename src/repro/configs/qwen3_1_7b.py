@@ -1,0 +1,23 @@
+"""Qwen3-1.7B — dense GQA decoder with QK-norm [hf:Qwen/Qwen3-8B family].
+
+Pool line: 28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936 —
+qk_norm, GQA.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="qwen3-1.7b",
+    arch_type="dense",
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab=151936,
+    segments=(Segment(repeat=28, pattern=("attn",)),),
+    qk_norm=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    long_context_window=8192,
+    citation="hf:Qwen/Qwen3-8B (Qwen3 family card)",
+)

@@ -1,0 +1,31 @@
+"""RecurrentGemma-9B — Griffin hybrid: RG-LRU + local attention, 2:1
+[arXiv:2402.19427].
+
+Pool line: 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000 —
+RG-LRU + local attn, 1:2 (one attention layer per two recurrent).
+38 = 12×(rec,rec,attn) + (rec,rec). Local attention window 2048 per the
+model card; lru_width = d_model. Natively sub-quadratic → long_500k runs
+without a carve-out.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    segments=(
+        Segment(repeat=12, pattern=("rglru", "rglru", "swa")),
+        Segment(repeat=1, pattern=("rglru", "rglru")),
+    ),
+    sliding_window=2048,
+    rg_conv_width=4,
+    rg_d_rnn=4096,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    citation="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+)

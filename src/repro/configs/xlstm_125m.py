@@ -1,0 +1,23 @@
+"""xLSTM-125M — alternating sLSTM / mLSTM blocks [arXiv:2405.04517].
+
+Pool line: 12L d_model=768 4H (GQA kv=4) d_ff=0 vocab=50304 — sLSTM +
+mLSTM blocks. d_ff=0: the blocks are self-contained (mLSTM carries pf=2
+up/down projections, sLSTM a pf≈4/3 gated MLP). Recurrent → long_500k is
+natively O(1)-state.
+"""
+from repro.models.config import ArchConfig, Segment
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    arch_type="ssm",
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab=50304,
+    segments=(Segment(repeat=6, pattern=("mlstm", "slstm")),),
+    ffn_kind="none",
+    tie_embeddings=True,
+    citation="arXiv:2405.04517 (xLSTM: Extended Long Short-Term Memory)",
+)

@@ -1,0 +1,18 @@
+"""CC-FedAvg core: the paper's contribution as a composable JAX module.
+
+* :mod:`repro.core.engine`    — vectorized-client federation (Alg. 1/2/3,
+  Strategies 1/2/3, CC(c), FedNova, FedAvg full/dropout).
+* :mod:`repro.core.schedules` — round-robin / ad-hoc / sync / dropout plans.
+* :mod:`repro.core.podlevel`  — pods-as-clients CC-FedAvg for LLM-scale
+  training on the multi-pod mesh.
+"""
+from repro.core.engine import (  # noqa: F401
+    FedConfig,
+    STRATEGIES,
+    init_fed_state,
+    make_round_fn,
+    run_federated,
+    evaluate,
+    cost_report,
+)
+from repro.core.schedules import Plan, make_plan, fednova_local_steps  # noqa: F401

@@ -1,0 +1,79 @@
+"""Update (Δ) compression for federated uploads — beyond-paper extension.
+
+CC-FedAvg already cuts *computation* by `1 − p_i`; upload cost is still a
+full model per participating round (Alg. 1) or per trained round
+(Alg. 2). Since Δ is an SGD increment with small dynamic range, int8
+per-leaf symmetric quantization compresses uploads ~4× (vs f32) at
+negligible aggregation error — and composes with every strategy because
+the server aggregates dequantized means.
+
+API mirrors the pytree algebra the engine uses:
+
+    q = quantize_tree(delta)            # int8 payload + f32 scales
+    delta2 = dequantize_tree(q)         # back to float
+    report = compressed_report(plan, model_bytes)  # Appendix-A accounting
+                                                   # with compression
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import cost_report
+from repro.core.schedules import Plan
+
+PyTree = Any
+_QMAX = 127.0
+
+
+class QuantizedTree(NamedTuple):
+    payload: PyTree     # int8 leaves
+    scales: PyTree      # f32 per-leaf scale
+
+
+def quantize_tree(tree: PyTree) -> QuantizedTree:
+    """Symmetric per-leaf int8 quantization (scale = max|x| / 127)."""
+    def q(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / _QMAX
+        return jnp.clip(jnp.round(xf / scale), -_QMAX, _QMAX
+                        ).astype(jnp.int8), scale
+
+    pairs = jax.tree.map(q, tree)
+    payload = jax.tree.map(lambda p: p[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return QuantizedTree(payload, scales)
+
+
+def dequantize_tree(q: QuantizedTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree.map(
+        lambda p, s: (p.astype(jnp.float32) * s).astype(dtype),
+        q.payload, q.scales)
+
+
+def quantization_error(tree: PyTree) -> float:
+    """Relative L2 error of one quantize→dequantize round trip."""
+    from repro.utils.pytree import tree_norm, tree_sub
+    back = dequantize_tree(quantize_tree(tree))
+    return float(tree_norm(tree_sub(tree, back)) /
+                 jnp.maximum(tree_norm(tree), 1e-12))
+
+
+def compressed_report(plan: Plan, model_bytes: int, *,
+                      variant: str = "client",
+                      bytes_per_param_before: int = 4) -> dict:
+    """Appendix-A upload accounting with int8 Δ compression.
+
+    int8 payload + one f32 scale per leaf ≈ model_bytes/4; the 'skip'
+    signal paths of Alg. 2/3 are already ~free and stay uncompressed.
+    """
+    base = cost_report(plan, model_bytes, variant=variant)
+    ratio = 1.0 / bytes_per_param_before
+    out = dict(base)
+    out["upload_bytes_compressed"] = int(base["upload_bytes"] * ratio)
+    out["compression_ratio"] = bytes_per_param_before
+    return out

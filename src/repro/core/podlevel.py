@@ -1,0 +1,122 @@
+"""Pod-level CC-FedAvg — the paper's technique as a multi-pod training
+feature.
+
+On the production mesh ``(pod, data, model)`` each **pod is one federated
+client** (cross-silo FL between pods). All per-client state carries a leading
+``clients`` axis sharded over ``pod``:
+
+  * ``params``  (clients, …)  — each pod's current local model copy,
+  * ``deltas``  (clients, …)  — each pod's stored Δ_{t−1} (Strategy 3),
+  * ``global_params`` (…)     — replicated across pods.
+
+One ``cc_pod_round`` = K client-local optimizer steps (vmapped over the
+client axis → embarrassingly parallel across pods, data+tensor parallel
+inside a pod) followed by the CC aggregation: a *masked mean over the client
+axis*, which XLA lowers to the cross-pod all-reduce. A pod that skips the
+round (``train_mask=0``) contributes its stored Δ — its K training steps are
+dead code *for that pod's devices* only in the sense that the result is
+discarded; on real hardware the scheduler simply does not dispatch the
+program for that pod, saving the round's FLOPs. The dry-run lowers both the
+round with training and the estimation-only round so both cost profiles are
+visible (§Roofline).
+
+The same module also provides the single-pod "vectorized silos" layout
+(clients sharded over ``data``) used when one pod hosts several silos.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.models.config import ArchConfig
+from repro.utils.pytree import PyTree, tree_broadcast_clients, tree_zeros_like
+
+
+def init_pod_fed_state(rng, cfg: ArchConfig, n_clients: int,
+                       delta_dtype=jnp.bfloat16) -> PyTree:
+    params = decoder.model_init(rng, cfg)
+    deltas = tree_broadcast_clients(
+        jax.tree.map(lambda x: jnp.zeros(x.shape, delta_dtype), params),
+        n_clients)
+    return {
+        "global_params": params,
+        "deltas": deltas,
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_cc_pod_round(cfg: ArchConfig, *, lr: float, local_steps: int,
+                      n_clients: int) -> Callable:
+    """Build the jittable federated round for LLM-scale clients.
+
+    batches: pytree with leaves (clients, K, per_client_batch, S, ...).
+    train_mask: (clients,) float — 1 for pods that train this round
+    (ad-hoc/round-robin schedules decide it, exactly as in the small-scale
+    engine).
+    """
+
+    def local_train(params, client_batches):
+        """K plain SGD steps (Eq. 2) from the broadcast global model."""
+        from repro.models.steps import cast_for_compute
+
+        def step(p, batch):
+            grads = jax.grad(
+                lambda q: decoder.loss_and_metrics(
+                    cast_for_compute(q, cfg), cfg, batch)[0])(p)
+            p = jax.tree.map(lambda a, g: a - lr * g.astype(a.dtype),
+                             p, grads)
+            return p, None
+
+        params, _ = jax.lax.scan(step, params, client_batches)
+        return params
+
+    def cc_pod_round(fed_state: PyTree, batches: PyTree,
+                     train_mask: jax.Array):
+        g = fed_state["global_params"]
+        broadcast = tree_broadcast_clients(g, n_clients)
+        local = jax.vmap(local_train)(broadcast, batches)
+        trained_delta = jax.tree.map(
+            lambda a, b: (a - b).astype(jnp.bfloat16), local, broadcast)
+        m = train_mask.astype(jnp.float32)
+
+        def mix(t, s):
+            mm = m.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype)
+            return t * mm + s * (1 - mm)
+
+        delta_i = jax.tree.map(mix, trained_delta, fed_state["deltas"])
+        # aggregation = mean over the client axis → cross-pod all-reduce
+        delta = jax.tree.map(lambda d: jnp.mean(d.astype(jnp.float32),
+                                                axis=0), delta_i)
+        new_global = jax.tree.map(lambda a, d: (a + d).astype(a.dtype),
+                                  g, delta)
+        return {
+            "global_params": new_global,
+            "deltas": delta_i,
+            "round": fed_state["round"] + 1,
+        }
+
+    return cc_pod_round
+
+
+def make_estimation_only_round(cfg: ArchConfig) -> Callable:
+    """The skip-round program a constrained pod actually executes: no
+    gradients at all — just replay Δ and join the all-reduce. Lowered in the
+    dry-run to document the cost asymmetry CC-FedAvg exploits."""
+
+    def est_round(fed_state: PyTree) -> PyTree:
+        delta = jax.tree.map(lambda d: jnp.mean(d.astype(jnp.float32),
+                                                axis=0),
+                             fed_state["deltas"])
+        new_global = jax.tree.map(
+            lambda a, d: (a + d).astype(a.dtype),
+            fed_state["global_params"], delta)
+        return {
+            "global_params": new_global,
+            "deltas": fed_state["deltas"],
+            "round": fed_state["round"] + 1,
+        }
+
+    return est_round

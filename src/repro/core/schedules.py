@@ -1,0 +1,106 @@
+"""Participation & training schedules (paper §VI-A).
+
+A federated run is driven by two precomputed boolean plans over
+(rounds T × clients N):
+
+* ``selection`` — which clients the server selects each round (S_t),
+* ``training``  — which selected clients perform real local training
+  (vs. estimating; the client-side decision driven by p_i).
+
+Schedules:
+* **round-robin** — client i trains once every W_i = round(1/p_i) rounds,
+  deterministically (energy-budget planning in advance; Fig. 1a).
+* **ad-hoc** — client i trains with probability p_i independently each round
+  (real-time load-dependent decision; Fig. 1b).
+* **sync** — all constrained clients skip/train in lockstep (the FedOpt-like
+  degenerate schedule of §VI-F, used to show ad-hoc matters).
+* **dropout** — FedAvg(dropout) baseline: client trains every round until its
+  budget quota ``p_i · T`` is exhausted, then leaves the federation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Plan:
+    selection: np.ndarray  # (T, N) bool — S_t membership
+    training: np.ndarray   # (T, N) bool — performs local training
+    p: np.ndarray          # (N,) budgets used to build the plan
+
+    @property
+    def rounds(self) -> int:
+        return self.selection.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return self.selection.shape[1]
+
+    def compute_fraction(self) -> float:
+        """Fraction of FedAvg(full) gradient work actually performed."""
+        return float((self.selection & self.training).sum()
+                     / max(1, self.selection.sum()))
+
+
+def server_selection(rng: np.random.Generator, t_rounds: int, n: int,
+                     ratio: float = 1.0) -> np.ndarray:
+    if ratio >= 1.0:
+        return np.ones((t_rounds, n), bool)
+    k = max(1, int(round(ratio * n)))
+    sel = np.zeros((t_rounds, n), bool)
+    for t in range(t_rounds):
+        sel[t, rng.choice(n, size=k, replace=False)] = True
+    return sel
+
+
+def _w_of(p: np.ndarray) -> np.ndarray:
+    return np.maximum(1, np.round(1.0 / np.clip(p, 1e-9, 1.0))).astype(int)
+
+
+def make_plan(kind: str, p: np.ndarray, t_rounds: int,
+              participation_ratio: float = 1.0, seed: int = 0) -> Plan:
+    rng = np.random.default_rng(seed)
+    n = len(p)
+    sel = server_selection(rng, t_rounds, n, participation_ratio)
+    w = _w_of(p)
+    if kind == "round_robin":
+        # client i trains on selected rounds counted mod W_i (so a client
+        # selected less often still meets its 1-in-W budget in expectation)
+        train = np.zeros((t_rounds, n), bool)
+        offsets = rng.integers(0, w)
+        counters = np.zeros(n, int)
+        for t in range(t_rounds):
+            due = (counters % w) == offsets
+            train[t] = sel[t] & due
+            counters += sel[t].astype(int)
+    elif kind == "adhoc":
+        train = rng.random((t_rounds, n)) < p[None, :]
+        train &= sel
+    elif kind == "sync":
+        # every client with p_i < 1 trains only when t % max(W) == 0
+        wmax = int(w.max())
+        beat = (np.arange(t_rounds) % wmax) == 0
+        train = np.where(p[None, :] >= 1.0, True, beat[:, None])
+        train &= sel
+    elif kind == "dropout":
+        quota = np.maximum(1, np.round(p * t_rounds)).astype(int)
+        used = np.zeros(n, int)
+        train = np.zeros((t_rounds, n), bool)
+        for t in range(t_rounds):
+            active = used < quota
+            train[t] = sel[t] & active
+            used += train[t].astype(int)
+        # dropped-out clients also leave aggregation entirely
+        sel = train.copy()
+    elif kind == "full":
+        train = sel.copy()
+    else:
+        raise ValueError(f"unknown schedule kind {kind!r}")
+    return Plan(selection=sel, training=train, p=np.asarray(p, float))
+
+
+def fednova_local_steps(p: np.ndarray, k_full: int) -> np.ndarray:
+    """FedNova spends the budget as fewer local iterations every round."""
+    return np.maximum(1, np.round(p * k_full)).astype(np.int32)

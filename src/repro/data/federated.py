@@ -1,0 +1,61 @@
+"""Stacked per-client datasets for the vectorized-client engine.
+
+The CC-FedAvg engine vmaps local training over a leading client axis, so
+client datasets are materialized as dense arrays ``(N, n_i_max, ...)`` with a
+validity count per client. Batch sampling inside jit draws uniform indices
+modulo each client's true size (unbiased within each client's local data —
+Assumption 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+@dataclass(frozen=True)
+class FederatedData:
+    x: jax.Array        # (N, M, ...) padded client features
+    y: jax.Array        # (N, M) padded client labels
+    sizes: jax.Array    # (N,) true per-client sample counts
+    n_classes: int
+
+    @property
+    def n_clients(self) -> int:
+        return self.x.shape[0]
+
+    def client_batch(self, key: jax.Array, batch_size: int):
+        """Sample one batch per client: returns (N, B, ...), (N, B)."""
+        keys = jax.random.split(key, self.n_clients)
+
+        def one(k, cx, cy, sz):
+            idx = jax.random.randint(k, (batch_size,), 0, 2 ** 30) % sz
+            return cx[idx], cy[idx]
+
+        return jax.vmap(one)(keys, self.x, self.y, self.sizes)
+
+
+def build_federated(ds: Dataset, parts: list[np.ndarray]) -> FederatedData:
+    n_clients = len(parts)
+    m = max(len(p) for p in parts)
+    feat_shape = ds.x.shape[1:]
+    x = np.zeros((n_clients, m) + feat_shape, np.float32)
+    y = np.zeros((n_clients, m), np.int32)
+    sizes = np.zeros((n_clients,), np.int32)
+    for i, idx in enumerate(parts):
+        k = len(idx)
+        sizes[i] = max(1, k)
+        if k:
+            x[i, :k] = ds.x[idx]
+            y[i, :k] = ds.y[idx]
+            # cycle-pad so modulo indexing stays uniform over real samples
+            reps = int(np.ceil(m / k))
+            x[i, k:] = np.tile(ds.x[idx],
+                               (reps,) + (1,) * (ds.x.ndim - 1))[: m - k]
+            y[i, k:] = np.tile(ds.y[idx], reps)[: m - k]
+    return FederatedData(jnp.asarray(x), jnp.asarray(y),
+                         jnp.asarray(sizes), ds.n_classes)

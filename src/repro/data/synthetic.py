@@ -1,0 +1,129 @@
+"""Synthetic classification datasets standing in for CIFAR-10 / FMNIST.
+
+The container is offline, so the paper's image datasets are unavailable.
+These generators produce tasks with the properties the paper's experiments
+rely on: many classes, learnable-but-nontrivial decision boundaries, and
+enough samples to partition non-IID across clients (see
+:mod:`repro.data.partition`).
+
+Two families:
+
+* ``gaussian_mixture`` — class-conditional Gaussians on a hypersphere with
+  per-class multi-modal clusters (an FMNIST/MLP stand-in).
+* ``teacher_net`` — labels produced by a frozen random MLP teacher over
+  uniform inputs (a harder CIFAR/CNN stand-in with non-linear boundaries).
+* ``image_mixture`` — gaussian_mixture reshaped to (H, W, C) images with
+  class-dependent spatial structure so conv models have signal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Dataset:
+    x: np.ndarray  # (n, ...) float32
+    y: np.ndarray  # (n,) int32
+    n_classes: int
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
+
+    def subset(self, idx: np.ndarray) -> "Dataset":
+        return Dataset(self.x[idx], self.y[idx], self.n_classes)
+
+
+def gaussian_mixture(rng: np.random.Generator, *, n: int = 4096,
+                     n_classes: int = 10, dim: int = 32,
+                     modes_per_class: int = 2, noise: float = 0.9) -> Dataset:
+    centers = rng.normal(size=(n_classes, modes_per_class, dim))
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True) / 2.2
+    y = rng.integers(0, n_classes, size=n)
+    mode = rng.integers(0, modes_per_class, size=n)
+    x = centers[y, mode] + noise * rng.normal(size=(n, dim))
+    return Dataset(x.astype(np.float32), y.astype(np.int32), n_classes)
+
+
+def teacher_net(rng: np.random.Generator, *, n: int = 4096,
+                n_classes: int = 10, dim: int = 32,
+                hidden: int = 64) -> Dataset:
+    w1 = rng.normal(size=(dim, hidden)) / np.sqrt(dim)
+    w2 = rng.normal(size=(hidden, n_classes)) / np.sqrt(hidden)
+    x = rng.uniform(-2, 2, size=(n, dim))
+    logits = np.tanh(x @ w1) @ w2
+    y = np.argmax(logits + 0.1 * rng.normal(size=logits.shape), axis=-1)
+    return Dataset(x.astype(np.float32), y.astype(np.int32), n_classes)
+
+
+def image_mixture(rng: np.random.Generator, *, n: int = 2048,
+                  n_classes: int = 10, hw: int = 8, channels: int = 1,
+                  noise: float = 0.8) -> Dataset:
+    """Images with class-dependent low-frequency spatial patterns."""
+    dim = hw * hw * channels
+    base = gaussian_mixture(rng, n=n, n_classes=n_classes, dim=dim,
+                            noise=noise)
+    x = base.x.reshape(n, hw, hw, channels)
+    # add a class-dependent smooth gradient so conv filters have structure
+    yy, xx = np.meshgrid(np.linspace(-1, 1, hw), np.linspace(-1, 1, hw),
+                         indexing="ij")
+    for c in range(n_classes):
+        phase = 2 * np.pi * c / n_classes
+        pattern = np.cos(2 * yy + phase) + np.sin(2 * xx + phase)
+        x[base.y == c] += 0.7 * pattern[None, :, :, None]
+    return Dataset(x.astype(np.float32), base.y, n_classes)
+
+
+def train_test_split(ds: Dataset, test_frac: float = 0.2,
+                     seed: int = 0) -> tuple[Dataset, Dataset]:
+    """Split one generated dataset so train/test share the generative model."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(ds))
+    n_test = int(round(test_frac * len(ds)))
+    return ds.subset(perm[n_test:]), ds.subset(perm[:n_test])
+
+
+def make_dataset(kind: str, seed: int = 0, **kw) -> Dataset:
+    rng = np.random.default_rng(seed)
+    if kind == "gaussian":
+        return gaussian_mixture(rng, **kw)
+    if kind == "teacher":
+        return teacher_net(rng, **kw)
+    if kind == "image":
+        return image_mixture(rng, **kw)
+    raise ValueError(f"unknown dataset kind {kind!r}")
+
+
+def batch_iterator(rng_key: jax.Array, x: jax.Array, y: jax.Array,
+                   batch_size: int):
+    """Infinite shuffled batch sampler as a pure function of a JAX key.
+
+    Returns ``sample(key) -> (xb, yb)`` suitable for use inside jit/vmap
+    (uniform with-replacement sampling — matches the unbiased-gradient
+    Assumption 2 of the paper).
+    """
+    n = x.shape[0]
+
+    def sample(key):
+        idx = jax.random.randint(key, (batch_size,), 0, n)
+        return x[idx], y[idx]
+
+    del rng_key
+    return sample
+
+
+def token_lm_dataset(rng: np.random.Generator, *, n_seq: int, seq_len: int,
+                     vocab: int, order: int = 2) -> Dataset:
+    """Synthetic Markov-chain token streams for LM training examples."""
+    trans = rng.dirichlet(0.1 * np.ones(vocab), size=(vocab,))
+    seqs = np.empty((n_seq, seq_len), np.int32)
+    state = rng.integers(0, vocab, size=n_seq)
+    for t in range(seq_len):
+        seqs[:, t] = state
+        nxt = np.array([rng.choice(vocab, p=trans[s]) for s in state])
+        state = nxt
+    del order
+    return Dataset(seqs, np.zeros((n_seq,), np.int32), vocab)

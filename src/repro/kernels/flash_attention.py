@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window, GQA).
+
+TPU-native adaptation of the paper-adjacent attention hot spot: the online-
+softmax tiling lives in VMEM, Q/K tiles are MXU-shaped (multiples of
+(8, 128)), and the (m, l, acc) running state persists in VMEM scratch across
+the innermost (key-block) grid dimension — the TPU grid is sequential over
+the last axis, which replaces the CUDA-style thread-block loop.
+
+Layout: q (B, H, Sq, hd); k, v (B, Kv, Sk, hd); GQA maps query head h to
+key/value head h // (H // Kv) in the BlockSpec index map (no materialized
+head broadcast).
+
+Out-of-band (fully masked) key blocks are predicated off with ``pl.when`` —
+for causal masks this skips the upper-triangular half of the grid's work,
+and for sliding windows everything outside the band.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VALUE = -1.0e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, n_kb: int,
+                  causal: bool, window: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level band test: any (q, k) pair in range?
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + block_q - 1
+    if window > 0:
+        needed &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_scr[...]                                  # (bq, LANES)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)[:, None]                  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1])                        # (bq, bk)
+        l_new = l_prev * corr + jnp.broadcast_to(
+            jnp.sum(p, axis=1)[:, None], l_prev.shape)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, hd)
+        acc_scr[...] = acc_scr[...] * corr[:, :1] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == n_kb - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        o_ref[0, 0, ...] = (acc_scr[...]
+                            / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, hd); k, v: (B, Kv, Sk, hd). Returns (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_qb, n_kb = sq // block_q, sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kb=n_kb, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            # (m, l) carried across key blocks; lane-replicated for TPU tiling
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

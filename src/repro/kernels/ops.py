@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies then execute through the Pallas interpreter, which is how the
+test suite validates them against :mod:`repro.kernels.ref`). On a TPU
+backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cc_delta_update as _cc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import slstm_scan as _sl
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Flash attention over (B, H, S, hd) / (B, Kv, S, hd) tensors."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def rglru_scan(a, b, h0, *, chunk: int = 128, block_d: int = 128,
+               interpret: bool | None = None):
+    """Linear recurrence h_t = a_t·h_{t−1} + b_t over (B, S, D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rg.rglru_scan_fwd(a.astype(jnp.float32), b.astype(jnp.float32),
+                              h0.astype(jnp.float32), chunk=chunk,
+                              block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def slstm_scan(wx, r, h0, c0, n0, m0, *, chunk: int = 256,
+               interpret: bool | None = None):
+    """VMEM-resident sLSTM recurrence over (B, S, 4D) projections."""
+    interpret = _default_interpret() if interpret is None else interpret
+    f32 = jnp.float32
+    return _sl.slstm_scan_fwd(wx.astype(f32), r, h0.astype(f32),
+                              c0.astype(f32), n0.astype(f32),
+                              m0.astype(f32), chunk=chunk,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def cc_delta_update(locals_, deltas, globals_, train_mask, sel_mask, *,
+                    block: int = 65536, interpret: bool | None = None):
+    """Fused CC-FedAvg round update over flat (N, P) client params."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cc.cc_delta_update_fwd(locals_, deltas, globals_, train_mask,
+                                   sel_mask, block=block,
+                                   interpret=interpret)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B, H, Sq, hd); k, v: (B, Kv, Sk, hd). Naive fp32 attention."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, kv, g, sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential reference: h_t = a_t h_{t−1} + b_t. (B, S, D)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0,
+                         (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def slstm_scan_ref(wx, r, h0, c0, n0, m0):
+    """Sequential sLSTM reference matching the kernel's gate math.
+
+    wx: (B, S, 4D) with b_in folded in; r: (4, H, hd, hd).
+    Returns (hs (B, S, D), (h, c, n, m))."""
+    b, s, d4 = wx.shape
+    d = d4 // 4
+    _, h_heads, hd, _ = r.shape
+    rf = r.astype(jnp.float32)
+
+    def step(state, wx_t):
+        h, c, n, m = state
+        hh = h.reshape(b, h_heads, hd)
+        rec = jnp.einsum("bhd,ghde->gbhe", hh, rf).reshape(4, b, d)
+        pre = wx_t.astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) \
+            + rec
+        z = jnp.tanh(pre[0])
+        i_ = pre[1]
+        lf = jax.nn.log_sigmoid(pre[2])
+        o = jax.nn.sigmoid(pre[3])
+        m_new = jnp.maximum(lf + m, i_)
+        iexp = jnp.exp(i_ - m_new)
+        fexp = jnp.exp(lf + m - m_new)
+        c_new = fexp * c + iexp * z
+        n_new = jnp.maximum(fexp * n + iexp, 1e-6)
+        h_new = o * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                             wx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), state
+
+
+def cc_delta_update_ref(locals_, deltas, globals_, train_mask, sel_mask):
+    """Unfused reference of the CC round update (Alg. 1 lines 12/15/20/21)."""
+    g = globals_.astype(jnp.float32)
+    trained = locals_.astype(jnp.float32) - g[None]
+    d = jnp.where(train_mask[:, None] > 0, trained,
+                  deltas.astype(jnp.float32))
+    selw = sel_mask.astype(jnp.float32)[:, None]
+    agg = jnp.sum(d * selw, axis=0) / jnp.maximum(jnp.sum(selw), 1e-9)
+    return d.astype(deltas.dtype), (g + agg).astype(globals_.dtype)

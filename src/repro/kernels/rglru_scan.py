@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence
+``h_t = a_t ⊙ h_{t−1} + b_t``  (gates precomputed).
+
+TPU adaptation: the recurrence is *serial in time, parallel in channels* —
+the natural TPU layout is a grid over (batch, channel-blocks, time-chunks)
+with the time-chunk axis innermost (sequential on TPU), carrying the running
+state ``h`` in VMEM scratch across chunks. Each inner step is a (1, block_d)
+vector op on the VPU lanes; channel blocks are 128-lane aligned. This
+replaces a GPU-style warp-parallel scan: no shuffles exist on TPU, and the
+lane dimension already gives the parallelism.
+
+Inputs a, b: (B, S, D) fp32; h0: (B, D). Outputs hs: (B, S, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(h0_ref, a_ref, b_ref, hs_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]                   # (1, block_d)
+
+    def step(t, h):
+        h = a_ref[0, t] * h + b_ref[0, t]          # (block_d,)
+        hs_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[0])
+    h_scr[...] = h[None]
+
+
+def rglru_scan_fwd(a, b, h0, *, chunk: int = 128, block_d: int = 128,
+                   interpret: bool = False):
+    """Blocked scan. a, b: (B, S, D); h0: (B, D) -> hs (B, S, D)."""
+    bsz, s, d = a.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    block_d = min(block_d, d)
+    while d % block_d:
+        block_d -= 1
+    n_chunks, n_db = s // chunk, d // block_d
+
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, n_db, n_chunks),                 # time innermost
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda ib, idb, ic: (ib, idb)),
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda ib, idb, ic: (ib, ic, idb)),
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda ib, idb, ic: (ib, ic, idb)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d),
+                               lambda ib, idb, ic: (ib, ic, idb)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(h0, a, b)

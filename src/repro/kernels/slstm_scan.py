@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the sLSTM recurrence (xLSTM, arXiv:2405.04517).
+
+The XLA lowering of the sLSTM time scan re-reads the recurrent gate
+matrices R (4, H, hd, hd) from HBM every timestep — at prefill_32k that is
+S·layers ≈ 196k reads of 2.4 MB ≈ 460 GB of HBM traffic per device, which
+makes xlstm-125m/prefill_32k the worst roofline point of the whole fleet
+(§Perf pair 2). The TPU-native fix: R easily fits VMEM, so the kernel
+pins R (and the running state h/c/n/m) in VMEM across a whole time chunk —
+HBM traffic collapses to the wx stream + the hs output.
+
+Grid: (batch, time-chunks), time innermost (sequential on TPU). Gate math
+is the stabilized exponential-gating form of the reference
+(:func:`repro.models.xlstm._slstm_step`), evaluated in f32 on the VPU; the
+per-head R matmuls hit the MXU via dot_general batched over heads.
+
+Shapes: wx (B, S, 4D) — input projections including b_in; r (4, H, hd, hd);
+state h/c/n/m (B, D). Outputs: hs (B, S, D) + final (h, c, n, m).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(wx_ref, r_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+                  hs_ref, hT_ref, cT_ref, nT_ref, mT_ref,
+                  h_scr, c_scr, n_scr, m_scr, *,
+                  chunk: int, n_chunks: int, n_heads: int, head_dim: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
+        n_scr[...] = n0_ref[...]
+        m_scr[...] = m0_ref[...]
+
+    r = r_ref[...].astype(jnp.float32)            # (4, H, hd, hd)
+    d = n_heads * head_dim
+
+    def step(t, state):
+        h, c, n, m = state                        # each (1, D) f32
+        hh = h.reshape(n_heads, head_dim)
+        # rec[g,h,e] = Σ_d hh[h,d]·r[g,h,d,e]  (einsum bhd,ghde->ghe)
+        rec = jax.lax.dot_general(
+            r, hh, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)   # (H, 4, hd)
+        rec = rec.transpose(1, 0, 2).reshape(4, d)
+        wx_t = wx_ref[0, t].astype(jnp.float32)   # (4D,)
+        pre = wx_t.reshape(4, d) + rec
+        z = jnp.tanh(pre[0])[None]
+        i_ = pre[1][None]
+        lf = jax.nn.log_sigmoid(pre[2])[None]
+        o = jax.nn.sigmoid(pre[3])[None]
+        m_new = jnp.maximum(lf + m, i_)
+        iexp = jnp.exp(i_ - m_new)
+        fexp = jnp.exp(lf + m - m_new)
+        c_new = fexp * c + iexp * z
+        n_new = jnp.maximum(fexp * n + iexp, 1e-6)
+        h_new = o * c_new / n_new
+        hs_ref[0, t, :] = h_new[0]
+        return h_new, c_new, n_new, m_new
+
+    h, c, n, m = jax.lax.fori_loop(
+        0, chunk, step, (h_scr[...], c_scr[...], n_scr[...], m_scr[...]))
+    h_scr[...], c_scr[...], n_scr[...], m_scr[...] = h, c, n, m
+
+    @pl.when(ic == n_chunks - 1)
+    def _finalize():
+        hT_ref[...] = h
+        cT_ref[...] = c
+        nT_ref[...] = n
+        mT_ref[...] = m
+
+
+def slstm_scan_fwd(wx, r, h0, c0, n0, m0, *, chunk: int = 256,
+                   interpret: bool = False):
+    """wx: (B, S, 4D) f32; r: (4, H, hd, hd); state: (B, D) each.
+
+    Returns (hs (B, S, D), (hT, cT, nT, mT)).
+    """
+    b, s, d4 = wx.shape
+    d = d4 // 4
+    _, h_heads, hd, _ = r.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+
+    kernel = functools.partial(
+        _slstm_kernel, chunk=chunk, n_chunks=n_chunks, n_heads=h_heads,
+        head_dim=hd)
+    state_spec = pl.BlockSpec((1, d), lambda ib, ic: (ib, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),                       # time innermost
+        in_specs=[
+            pl.BlockSpec((1, chunk, d4), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((4, h_heads, hd, hd), lambda ib, ic: (0, 0, 0, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda ib, ic: (ib, ic, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32) for _ in range(4)],
+        interpret=interpret,
+    )(wx, r, h0, c0, n0, m0)
+    hs, hT, cT, nT, mT = out
+    return hs, (hT, cT, nT, mT)

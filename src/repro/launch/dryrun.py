@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax import;
+# jax locks the device count at first initialization.
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract the §Roofline terms.
+
+For each pair this lowers the step the shape dictates —
+``train_4k`` → ``train_step`` (AdamW optimizer step),
+``prefill_32k`` → ``prefill_step``,
+``decode_32k`` / ``long_500k`` → ``serve_step`` (1 token vs KV cache) —
+with parameter/batch/cache shardings from :mod:`repro.sharding.rules`,
+prints ``memory_analysis()`` / ``cost_analysis()``, and writes one JSON
+record per pair for EXPERIMENTS.md §Dry-run/§Roofline.
+
+``--step ccround`` additionally lowers the paper's technique at pod
+granularity (pods-as-clients CC-FedAvg round) on the multi-pod mesh.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun
+    python -m repro.launch.dryrun --all --multi-pod --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import INPUT_SHAPES, ArchConfig, InputShape
+from repro.models.steps import (init_train_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.optim.optimizers import adamw
+from repro.optim.schedules import constant_lr
+from repro.sharding.api import ShardingContext, use_sharding
+from repro.sharding.rules import (batch_pspecs, cache_pspecs, make_rules,
+                                  params_pspecs)
+from repro.utils.pytree import tree_map_with_path
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(ctx: ShardingContext, state_specs):
+    """NamedShardings for a train-state pytree (params + mirrored opt)."""
+    from jax.sharding import NamedSharding
+    from repro.sharding.rules import param_logical_axes
+
+    def one(path, leaf):
+        axes = param_logical_axes(path, leaf)
+        return NamedSharding(ctx.mesh, ctx.spec(axes, tuple(leaf.shape)))
+
+    return tree_map_with_path(one, state_specs)
+
+
+def named(ctx: ShardingContext, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+
+def _build(cfg: ArchConfig, shape: InputShape, ctx: ShardingContext):
+    """Returns (fn, args tuple of ShapeDtypeStructs, in_shardings tuple)."""
+    specs = cfglib.input_specs(cfg, shape)
+    if shape.mode == "train":
+        opt = adamw()
+        fn = make_train_step(cfg, opt, constant_lr(1e-4))
+        state_specs = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt))
+        in_sh = (state_shardings(ctx, state_specs),
+                 named(ctx, batch_pspecs(ctx, specs["batch"])))
+        return fn, (state_specs, specs["batch"]), in_sh
+    if shape.mode == "prefill":
+        fn = make_prefill_step(cfg, capacity=shape.seq_len)
+        params_specs = jax.eval_shape(
+            lambda: __import__("repro.models.decoder", fromlist=["x"])
+            .model_init(jax.random.PRNGKey(0), cfg))
+        in_sh = (state_shardings(ctx, params_specs),
+                 named(ctx, batch_pspecs(ctx, specs["batch"])))
+        return fn, (params_specs, specs["batch"]), in_sh
+    # decode
+    fw = cfglib.decode_window(cfg, shape)
+    fn = make_decode_step(cfg, force_window=fw)
+    params_specs = jax.eval_shape(
+        lambda: __import__("repro.models.decoder", fromlist=["x"])
+        .model_init(jax.random.PRNGKey(0), cfg))
+    caches = specs["caches"]
+    tok_spec = batch_pspecs(ctx, {"tokens": specs["tokens"]})["tokens"]
+    in_sh = (state_shardings(ctx, params_specs),
+             named(ctx, cache_pspecs(ctx, caches, stacked=True)),
+             named(ctx, tok_spec),
+             named(ctx, ctx.spec((), ())))
+    return fn, (params_specs, caches, specs["tokens"], specs["t"]), in_sh
+
+
+def _build_ccround(cfg: ArchConfig, shape: InputShape, ctx: ShardingContext,
+                   *, local_steps: int = 1, n_clients: int = 2):
+    """The paper's technique at pod granularity (multi-pod mesh only)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.podlevel import init_pod_fed_state, make_cc_pod_round
+
+    fn = make_cc_pod_round(cfg, lr=1e-3, local_steps=local_steps,
+                           n_clients=n_clients)
+    fed_specs = jax.eval_shape(
+        lambda: init_pod_fed_state(jax.random.PRNGKey(0), cfg, n_clients))
+    from repro.sharding.rules import param_logical_axes
+
+    def fed_sh(path, leaf):
+        if path.startswith("deltas"):
+            axes = ("clients",) + param_logical_axes(path, leaf)[1:]
+        elif path.startswith("global_params"):
+            axes = param_logical_axes(path, leaf)
+        else:
+            axes = (None,) * leaf.ndim
+        return NamedSharding(ctx.mesh, ctx.spec(axes, tuple(leaf.shape)))
+
+    fed_sharding = tree_map_with_path(fed_sh, fed_specs)
+    per_client = shape.global_batch // n_clients
+    bspec = cfglib.batch_specs(cfg, per_client, shape.seq_len)
+
+    def stack(s):
+        return jax.ShapeDtypeStruct(
+            (n_clients, local_steps) + s.shape, s.dtype)
+
+    batches = jax.tree.map(stack, bspec)
+
+    def shard_of(key, s):
+        if key == "pos3":        # (clients, K, 3, B, S)
+            return NamedSharding(ctx.mesh, P("pod", None, None, "data"))
+        if len(s.shape) >= 3:    # (clients, K, B, ...)
+            return NamedSharding(ctx.mesh, P("pod", None, "data"))
+        return NamedSharding(ctx.mesh, P("pod", None))
+
+    b_shard = {k: shard_of(k, v) for k, v in batches.items()}
+    mask = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    mask_sh = NamedSharding(ctx.mesh, P("pod"))
+    return fn, (fed_specs, batches, mask), (fed_sharding, b_shard, mask_sh)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               step: str = "auto", local_steps: int = 1,
+               verbose: bool = True, expert_parallel: bool | None = None,
+               config_override=None) -> dict:
+    cfg = config_override or cfglib.get_config(arch)
+    if expert_parallel is not None and cfg.moe is not None:
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, expert_parallel=expert_parallel))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    # weight-stationary serving: at decode, FSDP means all-gathering the
+    # whole model per token; when the (model-axis-sharded) params fit in
+    # HBM alongside the caches, replicate over `data` instead (§Perf D1)
+    fsdp = True
+    if shape.mode == "decode":
+        param_bytes = 4 * analysis.total_param_count(cfg)
+        fsdp = param_bytes > 8e9
+    rules = make_rules(
+        multi_pod=multi_pod, mode=shape.mode, fsdp=fsdp,
+        expert_parallel=bool(cfg.moe and cfg.moe.expert_parallel),
+        context_parallel_attn=bool(cfg.n_heads % model_size),
+        kv_divisible=cfg.n_kv_heads % model_size == 0)
+    ctx = ShardingContext(mesh=mesh, rules=rules)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": step, "n_devices": n_dev, "ok": False,
+    }
+    try:
+        t0 = time.time()
+        with mesh, use_sharding(ctx):
+            if step == "ccround":
+                fn, args, in_sh = _build_ccround(
+                    cfg, shape, ctx, local_steps=local_steps)
+            else:
+                fn, args, in_sh = _build(cfg, shape, ctx)
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            }
+            if verbose:
+                print(f"  memory_analysis: {rec['memory']}")
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)}
+        terms = analysis.roofline_from_compiled(compiled)
+        rec["roofline"] = terms.to_dict()
+        n_active = analysis.active_param_count(cfg)
+        rec["active_params"] = n_active
+        if shape.mode == "train":
+            tokens = shape.global_batch * shape.seq_len
+            rec["model_flops"] = analysis.model_flops_train(cfg, tokens)
+        elif shape.mode == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            rec["model_flops"] = 2.0 * n_active * tokens
+        else:
+            rec["model_flops"] = analysis.model_flops_decode(
+                cfg, shape.global_batch)
+        hlo_global_flops = terms.flops * n_dev
+        rec["useful_flops_ratio"] = (
+            rec["model_flops"] / hlo_global_flops if hlo_global_flops else 0.0)
+        rec["ok"] = True
+        if verbose:
+            print(f"  cost_analysis: flops/dev={terms.flops:.3e} "
+                  f"bytes/dev={terms.hbm_bytes:.3e} "
+                  f"coll/dev={terms.collective_bytes:.3e}")
+            print(f"  roofline: compute={terms.compute_s * 1e3:.2f}ms "
+                  f"memory={terms.memory_s * 1e3:.2f}ms "
+                  f"collective={terms.collective_s * 1e3:.2f}ms "
+                  f"-> {terms.bottleneck}-bound | "
+                  f"useful_flops={rec['useful_flops_ratio']:.2%}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  FAILED: {rec['error']}")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=cfglib.ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) pair")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--step", default="auto",
+                    choices=("auto", "ccround"))
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--out", default="",
+                    help="directory for one JSON per pair")
+    args = ap.parse_args()
+
+    pairs: list[tuple[str, str]]
+    if args.all:
+        pairs = [(a, s) for a in cfglib.ARCH_NAMES for s in INPUT_SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch, shape in pairs:
+        tag = "2pod" if args.multi_pod else "1pod"
+        name = f"{arch}_{shape}_{tag}"
+        if args.step == "ccround":
+            name += "_ccround"
+        print(f"[dryrun] {name}")
+        rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                         step=args.step, local_steps=args.local_steps)
+        n_ok += rec["ok"]
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, name + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"[dryrun] {n_ok}/{len(pairs)} pairs compiled OK")
+    if n_ok < len(pairs):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

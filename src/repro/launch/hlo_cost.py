@@ -1,0 +1,362 @@
+"""Loop-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**,
+ignoring trip counts. Every deep model here runs scan-over-layers (plus
+inner scans: attention key chunks, chunked losses, recurrences), so the
+built-in numbers undercount FLOPs/bytes by 1–2 orders of magnitude. This
+module re-derives the three roofline quantities from ``compiled.as_text()``
+with loop multipliers:
+
+* **FLOPs** — every ``dot``/``convolution`` contributes
+  ``2 · prod(output dims) · prod(contracted dims)``; computation costs are
+  summed recursively through ``fusion`` / ``call`` / ``conditional`` edges,
+  and ``while`` edges multiply by the trip count parsed from the loop
+  condition (``lax.scan`` lowers to ``i < N`` with constant N).
+* **HBM bytes** — per instruction: output bytes + operand bytes, skipping
+  pure-metadata ops (tuple/gte/parameter/bitcast); fusions count only their
+  boundary operands/outputs, matching HloCostAnalysis' convention.
+* **collective bytes** — output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, again loop-scaled.
+
+All quantities are for the *per-device* SPMD program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(?:%?([\w.\-]+)|\{([^}]*)\})")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shapes_in(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(text):
+        total += _DTYPE_BYTES[dt] * math.prod(shape) if shape else \
+            _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_text: str          # output shape text (may be a tuple)
+    rest: str              # operands + attributes
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    is_entry: bool = False
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call", "iota",
+}
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "->" in line \
+                and line.rstrip().rstrip("{").rstrip():
+            head = line.split("(")[0].strip()
+            is_entry = head.startswith("ENTRY")
+            name = head.removeprefix("ENTRY").strip().lstrip("%")
+            if name and "=" not in head:
+                cur = Computation(name=name, is_entry=is_entry)
+                comps[name] = cur
+                if is_entry:
+                    entry_name = name
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, name, out_text, opcode, rest = m.groups()
+        ops = _operand_names(rest)
+        cur.instrs.append(Instr(name=name.lstrip("%"), opcode=opcode,
+                                out_text=out_text, rest=rest, operands=ops))
+    if entry_name is None and comps:
+        # fall back: last computation is the entry in XLA dumps
+        comps[list(comps)[-1]].is_entry = True
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names in the operand list. ``rest`` starts *inside* the instruction's
+    opening paren (the instr regex consumed it), so depth starts at 1."""
+    depth, out, token = 1, [], ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            continue
+        if ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+            continue
+        if depth >= 1:
+            token += ch
+    for part in token.split(","):
+        part = part.strip()
+        mm = re.match(r"%?([\w.\-]+)$", part)
+        if mm:
+            out.append(mm.group(1))
+    return out
+
+
+def _called_comps(instr: Instr) -> list[str]:
+    out = []
+    for m in _CALLED_RE.finditer(instr.rest):
+        if m.group(1):
+            out.append(m.group(1).lstrip("%"))
+        elif m.group(2):
+            out += [s.strip().lstrip("%")
+                    for s in m.group(2).split(",") if s.strip()]
+    return out
+
+
+def _dot_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    """2 · prod(out) · prod(contracted lhs dims)."""
+    out_elems = 0
+    for _, shp in _shapes_in(instr.out_text):
+        out_elems += math.prod(shp) if shp else 1
+    if instr.opcode == "dot":
+        mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        lhs_name = instr.operands[0] if instr.operands else None
+        lhs_text = shapes.get(lhs_name, "")
+        lhs_shapes = _shapes_in(lhs_text)
+        if not mm or not lhs_shapes:
+            return 0.0
+        dims = [int(d) for d in mm.group(1).split(",") if d]
+        lhs = lhs_shapes[0][1]
+        k = math.prod(lhs[d] for d in dims if d < len(lhs)) if dims else 1
+        return 2.0 * out_elems * k
+    if instr.opcode == "convolution":
+        # flops = 2 · prod(out) · (kernel spatial · in_channels)
+        kern_name = instr.operands[1] if len(instr.operands) > 1 else None
+        kern = _shapes_in(shapes.get(kern_name, ""))
+        if not kern:
+            return 0.0
+        kshape = kern[0][1]
+        mm = re.search(r"dim_labels=([\w.]+)_([\w.]+)->", instr.rest)
+        if mm:
+            klabels = mm.group(2)
+            k_elems = 1
+            for ch, dim in zip(klabels, kshape):
+                if ch != "o":        # everything but output features
+                    k_elems *= dim
+            return 2.0 * out_elems * k_elems
+        return 2.0 * out_elems * math.prod(kshape[:-1])
+    return 0.0
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: dict = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collective_by_op.items():
+            self.collective_by_op[k] = \
+                self.collective_by_op.get(k, 0.0) + mult * v
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict[str, CostTotals] = {}
+        self._shape_maps: dict[str, dict[str, str]] = {}
+
+    # -- helpers ----------------------------------------------------------
+
+    def _shapes(self, comp: Computation) -> dict[str, str]:
+        if comp.name not in self._shape_maps:
+            self._shape_maps[comp.name] = {
+                i.name: i.out_text for i in comp.instrs}
+        return self._shape_maps[comp.name]
+
+    def trip_count(self, cond_name: str) -> int:
+        """Parse `i < N` loop conditions (lax.scan); default 1 if opaque.
+
+        The loop bound is an s32[] constant in the condition computation
+        (the compare itself may live in a wrapped fusion). lax.scan loops
+        run 0..N−1, so the bound constant IS the trip count.
+        """
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts = []
+        for i in comp.instrs:
+            if i.opcode == "constant" and i.out_text.strip() == "s32[]":
+                mc = re.match(r"(\d+)\)", i.rest.strip())
+                if mc:
+                    consts.append(int(mc.group(1)))
+        return max(consts) if consts else 1
+
+    def fusion_operand_bytes(self, instr: Instr,
+                             shapes: dict[str, str]) -> float:
+        """Operand bytes at a fusion boundary. If a fusion *parameter* is
+        only consumed by an internal dynamic-slice (the fused per-step
+        read of a loop-carried buffer), the fusion touches just the slice
+        — charging the whole buffer every loop iteration overstates bytes
+        by orders of magnitude (HloCostAnalysis' convention is slice-only
+        too)."""
+        callee = None
+        for cn in _called_comps(instr):
+            if cn in self.comps:
+                callee = self.comps[cn]
+                break
+        # map parameter SHAPES that are only dynamic-sliced inside the
+        # fusion to their slice bytes (operand order in the printed HLO is
+        # not reliably parseable, shapes are)
+        sliced_shapes: dict[tuple, float] = {}
+        if callee is not None:
+            consumers: dict[str, list[Instr]] = {}
+            for ci in callee.instrs:
+                for o in ci.operands:
+                    consumers.setdefault(o, []).append(ci)
+            for ci in callee.instrs:
+                if ci.opcode != "parameter":
+                    continue
+                cons = consumers.get(ci.name, [])
+                if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                    key = tuple(_shapes_in(ci.out_text))
+                    sliced_shapes[key] = sum(
+                        _bytes_of(c.out_text) for c in cons)
+        total = 0.0
+        for o in instr.operands:
+            otext = shapes.get(o, "")
+            key = tuple(_shapes_in(otext))
+            if key and key in sliced_shapes:
+                total += sliced_shapes[key]
+            else:
+                total += _bytes_of(otext)
+        return total
+
+    # -- cost -------------------------------------------------------------
+
+    def cost(self, comp_name: str) -> CostTotals:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = CostTotals()
+        self._memo[comp_name] = total      # break cycles defensively
+        if comp is None:
+            return total
+        shapes = self._shapes(comp)
+        for instr in comp.instrs:
+            op = instr.opcode
+            # FLOPs
+            if op in ("dot", "convolution"):
+                total.flops += _dot_flops(instr, shapes)
+            # bytes (slice ops touch only the slice, matching
+            # HloCostAnalysis' in-place convention)
+            if op not in _SKIP_BYTES_OPS:
+                lname = instr.name
+                if "dynamic-update-slice" in lname \
+                        or op == "dynamic-update-slice":
+                    upd = (instr.operands[1]
+                           if len(instr.operands) > 1 else None)
+                    b = 2 * _bytes_of(shapes.get(upd, "")) if upd \
+                        else 2 * _bytes_of(instr.out_text)
+                elif "dynamic-slice" in lname or op == "dynamic-slice":
+                    b = 2 * _bytes_of(instr.out_text)
+                elif op == "fusion":
+                    b = _bytes_of(instr.out_text) + \
+                        self.fusion_operand_bytes(instr, shapes)
+                else:
+                    b = _bytes_of(instr.out_text)
+                    for o in instr.operands:
+                        b += _bytes_of(shapes.get(o, ""))
+                total.bytes += b
+            # collectives (incl. -start variants)
+            for coll in COLLECTIVE_OPS:
+                if op == coll or op.startswith(coll + "-start"):
+                    cb = _bytes_of(instr.out_text)
+                    total.collective_bytes += cb
+                    total.collective_by_op[coll] = \
+                        total.collective_by_op.get(coll, 0.0) + cb
+                    break
+            # recursion
+            if op == "while":
+                called = _called_comps(instr)
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+                body = mb.group(1) if mb else (called[0] if called else None)
+                cond = mc.group(1) if mc else None
+                trips = self.trip_count(cond) if cond else 1
+                if body:
+                    total.add(self.cost(body), mult=trips)
+                if cond:
+                    total.add(self.cost(cond), mult=trips)
+            elif op == "fusion":
+                # fused bodies don't touch HBM per-op — keep only their
+                # flops (dots can be fused) and any collectives
+                for callee in _called_comps(instr):
+                    sub = self.cost(callee)
+                    total.flops += sub.flops
+                    total.collective_bytes += sub.collective_bytes
+                    for k, v in sub.collective_by_op.items():
+                        total.collective_by_op[k] = \
+                            total.collective_by_op.get(k, 0.0) + v
+            elif op in ("call", "map", "reduce", "reduce-window",
+                        "scatter", "sort", "conditional", "custom-call"):
+                for callee in _called_comps(instr):
+                    total.add(self.cost(callee))
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.cost(name)
+        raise ValueError("no ENTRY computation found")
+
+
+def loop_aware_costs(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).entry_cost()

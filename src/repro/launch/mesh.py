@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests must keep seeing 1 device.
+
+Target hardware: TPU v5e pods. Single pod = 256 chips as a 16×16
+``(data, model)`` mesh; multi-pod = 2 pods = 512 chips as
+``(pod, data, model)`` — the ``pod`` axis carries the federated client
+dimension of pod-level CC-FedAvg (DESIGN.md §2) and the outermost data
+parallelism for plain training.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests of the sharded code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,118 @@
+"""§Perf tooling: loop-aware HLO breakdowns for the hillclimb loop.
+
+``breakdown(compiled_text)`` attributes every byte / collective-byte /
+FLOP to its instruction with while-loop multipliers applied, so the
+hypothesis loop can see WHAT dominates the dominant roofline term
+(which tensor is being gathered, which buffer re-read).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.launch.hlo_cost import (_SKIP_BYTES_OPS, COLLECTIVE_OPS,
+                                   HloCostModel, _bytes_of, _called_comps,
+                                   _dot_flops)
+
+
+@dataclass
+class Contribution:
+    kind: str          # 'bytes' | 'collective' | 'flops'
+    amount: float
+    comp: str
+    instr: str
+    opcode: str
+    shape: str
+    meta: str = ""
+
+
+def breakdown(hlo_text: str, top: int = 12) -> dict[str, list[Contribution]]:
+    model = HloCostModel(hlo_text)
+    contribs: list[Contribution] = []
+
+    def walk(name: str, mult: float, seen: tuple):
+        comp = model.comps.get(name)
+        if comp is None or name in seen:
+            return
+        shapes = model._shapes(comp)
+        for instr in comp.instrs:
+            op = instr.opcode
+            meta = ""
+            mm = re.search(r'op_name="([^"]+)"', instr.rest)
+            if mm:
+                meta = mm.group(1)[-70:]
+            if op not in _SKIP_BYTES_OPS:
+                if "dynamic-update-slice" in instr.name \
+                        or op == "dynamic-update-slice":
+                    upd = (instr.operands[1]
+                           if len(instr.operands) > 1 else None)
+                    b = 2 * _bytes_of(shapes.get(upd, "")) if upd \
+                        else 2 * _bytes_of(instr.out_text)
+                elif "dynamic-slice" in instr.name or op == "dynamic-slice":
+                    b = 2 * _bytes_of(instr.out_text)
+                elif op == "fusion":
+                    b = _bytes_of(instr.out_text) + \
+                        model.fusion_operand_bytes(instr, shapes)
+                else:
+                    b = _bytes_of(instr.out_text) + sum(
+                        _bytes_of(shapes.get(o, ""))
+                        for o in instr.operands)
+                contribs.append(Contribution(
+                    "bytes", b * mult, name, instr.name, op,
+                    instr.out_text[:48], meta))
+            for coll in COLLECTIVE_OPS:
+                if op == coll or op.startswith(coll + "-start"):
+                    cb = _bytes_of(instr.out_text)
+                    contribs.append(Contribution(
+                        "collective", cb * mult, name, instr.name, op,
+                        instr.out_text[:48], meta))
+                    break
+            if op in ("dot", "convolution"):
+                contribs.append(Contribution(
+                    "flops", _dot_flops(instr, shapes) * mult, name,
+                    instr.name, op, instr.out_text[:48], meta))
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+                trips = model.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * trips, seen + (name,))
+            elif op == "fusion":
+                for callee in _called_comps(instr):
+                    # fused dots / collectives only (bytes counted at the
+                    # fusion boundary above)
+                    sub = model.comps.get(callee)
+                    if sub is None:
+                        continue
+                    sshapes = model._shapes(sub)
+                    for si in sub.instrs:
+                        if si.opcode in ("dot", "convolution"):
+                            contribs.append(Contribution(
+                                "flops", _dot_flops(si, sshapes) * mult,
+                                callee, si.name, si.opcode,
+                                si.out_text[:48], meta))
+            elif op in ("call", "conditional", "custom-call"):
+                for callee in _called_comps(instr):
+                    walk(callee, mult, seen + (name,))
+
+    entry = next(c.name for c in model.comps.values() if c.is_entry)
+    walk(entry, 1.0, ())
+    out: dict[str, list[Contribution]] = {}
+    for kind in ("bytes", "collective", "flops"):
+        rows = sorted((c for c in contribs if c.kind == kind),
+                      key=lambda c: -c.amount)
+        out[kind] = rows[:top]
+        out[f"total_{kind}"] = sum(c.amount for c in contribs
+                                   if c.kind == kind)
+    return out
+
+
+def print_breakdown(hlo_text: str, kinds=("bytes", "collective"),
+                    top: int = 10) -> None:
+    bd = breakdown(hlo_text, top=top)
+    for kind in kinds:
+        print(f"--- top {kind} contributors "
+              f"(total {bd[f'total_{kind}']:.3e}) ---")
+        for c in bd[kind]:
+            print(f"  {c.amount:10.3e}  {c.opcode:<22} {c.shape:<40} "
+                  f"{c.meta}")

@@ -1,0 +1,199 @@
+"""Griffin / RecurrentGemma RG-LRU residual block (arXiv:2402.19427).
+
+Block structure (temporal-mixing half of a Griffin recurrent layer):
+
+    x ─ rmsnorm ─┬─ linear → GeLU ────────────────────────┐
+                 └─ linear → conv1d(w=4) → RG-LRU ─ ⊙ ────┴→ linear → out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a ξ_t + b_a)            (recurrence gate)
+    i_t = σ(W_x ξ_t + b_x)            (input gate)
+    a_t = a^(c·r_t),  a = σ(Λ)        (diagonal decay, c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (TPU-friendly log-depth scan; the Pallas kernel
+in :mod:`repro.kernels.rglru_scan` is the blocked VMEM version of the same
+operator). Decode is the O(1) single step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ArchConfig
+from repro.sharding.api import constrain
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array       # (B, d_rnn) recurrent state (float32)
+    conv: jax.Array    # (B, w-1, d_rnn) trailing conv inputs
+
+
+def init_rglru_cache(batch: int, cfg: ArchConfig) -> RGLRUCache:
+    return RGLRUCache(
+        h=jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, cfg.rg_conv_width - 1, cfg.d_rnn),
+                       jnp.dtype(cfg.compute_dtype)),
+    )
+
+
+def rglru_init(rng, cfg: ArchConfig, dtype):
+    d, dr, w = cfg.d_model, cfg.d_rnn, cfg.rg_conv_width
+    ks = jax.random.split(rng, 6)
+    # Λ init so that a = σ(Λ)^c ∈ [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[4], (dr,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(u ** (1 / _C) / (1 - u ** (1 / _C))).astype(jnp.float32)
+    return {
+        "w_gate_branch": nn.normal_init(ks[0], (d, dr), std=d ** -0.5,
+                                        dtype=dtype),
+        "w_rnn_branch": nn.normal_init(ks[1], (d, dr), std=d ** -0.5,
+                                       dtype=dtype),
+        "conv_w": nn.normal_init(ks[2], (w, dr), std=w ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": nn.normal_init(ks[3], (dr, dr), std=dr ** -0.5, dtype=dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": nn.normal_init(ks[5], (dr, dr), std=dr ** -0.5, dtype=dtype),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "w_out": nn.normal_init(
+            jax.random.fold_in(rng, 7), (dr, d), std=dr ** -0.5, dtype=dtype),
+    }
+
+
+def _sqrt_bounded_derivative(x):
+    """sqrt with clipped derivative (Griffin's numerics trick)."""
+    @jax.custom_gradient
+    def f(v):
+        s = jnp.sqrt(v)
+
+        def grad(g):
+            return (g * jnp.clip(0.5 / jnp.maximum(s, 1e-6),
+                                 None, _MAX_SQRT_GRADIENT),)
+        return s, grad
+    return f(x)
+
+
+def rglru_gates(p, xi):
+    """Gate computations shared by scan and step. xi: (..., d_rnn)."""
+    x32 = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x32 @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * r * jax.nn.softplus(-p["lam"])  # log σ(Λ)^(c·r) — stable
+    a = jnp.exp(log_a)
+    gated_x = i * x32
+    multiplier = _sqrt_bounded_derivative(
+        jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    return a, multiplier * gated_x
+
+
+_SCAN_CHUNK = 512
+
+
+def rglru_scan(p, xi, h0):
+    """Linear recurrence over the sequence — chunked associative scan.
+
+    A monolithic ``associative_scan`` over S=4096+ materializes log₂(S)
+    (B,S,D) f32 intermediates for the backward pass (23 GB/device for
+    recurrentgemma-9b train_4k — §Perf); chunking to 512 with a scanned
+    carry keeps the working set O(chunk) at identical math.
+
+    xi: (B, S, d_rnn), h0: (B, d_rnn). Returns (hs (B,S,dr), h_last).
+    """
+    a, b = rglru_gates(p, xi)  # both (B, S, dr) float32
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    bsz, s, dr = a.shape
+    chunk = min(_SCAN_CHUNK, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+    if n_chunks == 1:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return hs, hs[:, -1]
+
+    a_r = a.reshape(bsz, n_chunks, chunk, dr).transpose(1, 0, 2, 3)
+    b_r = b.reshape(bsz, n_chunks, chunk, dr).transpose(1, 0, 2, 3)
+
+    def body(h, ab):
+        ac, bc = ab
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hs_c = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hs_c[:, -1], hs_c
+
+    body = jax.checkpoint(body)
+    h_last, hs = jax.lax.scan(body, h0, (a_r, b_r))
+    hs = hs.transpose(1, 0, 2, 3).reshape(bsz, s, dr)
+    return hs, h_last
+
+
+def rglru_step(p, xi, h):
+    """One decode step. xi: (B, 1, d_rnn), h: (B, d_rnn)."""
+    a, b = rglru_gates(p, xi)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None, :], h_new
+
+
+def causal_conv1d(p, x, conv_state=None):
+    """Depthwise causal conv width w. x: (B,S,dr). Returns (y, new_state)."""
+    w = p["conv_w"].shape[0]
+    if conv_state is not None:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for j in range(w):
+        y = y + xp[:, j: j + s].astype(jnp.float32) \
+            * p["conv_w"][j].astype(jnp.float32)
+    y = y + p["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(w - 1):] if w > 1 else xp[:, :0]
+    return y.astype(x.dtype), new_state
+
+
+def rglru_block_apply(p, cfg: ArchConfig, x, *, cache: RGLRUCache | None):
+    """Full Griffin recurrent block. x: (B, S, D)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    gate = nn.gelu(xc @ p["w_gate_branch"].astype(cdt))
+    xi = xc @ p["w_rnn_branch"].astype(cdt)
+    xi = constrain(xi, ("batch", None, "rnn"))
+    if cache is None:
+        xi, _ = causal_conv1d(p, xi)
+        hs, _ = rglru_scan(p, xi, jnp.zeros(
+            (x.shape[0], cfg.d_rnn), jnp.float32))
+        new_cache = None
+    else:
+        xi, conv_state = causal_conv1d(p, xi, conv_state=cache.conv)
+        if x.shape[1] == 1:
+            hs, h_last = rglru_step(p, xi, cache.h)
+        elif cfg.use_pallas:
+            # prefill is forward-only: run the recurrence through the
+            # Pallas kernel (VMEM-blocked; interpret mode off-TPU)
+            from repro.kernels import ops as kops
+            a, b = rglru_gates(p, xi)
+            hs = kops.rglru_scan(a, b, cache.h)
+            h_last = hs[:, -1]
+        else:
+            hs, h_last = rglru_scan(p, xi, cache.h)
+        new_cache = RGLRUCache(h=h_last, conv=conv_state)
+    out = (hs.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    return out.astype(x.dtype), new_cache
+
+
+def rglru_prefill_cache(p, cfg: ArchConfig, x):
+    """Prefill returning the final recurrent + conv state."""
+    b = x.shape[0]
+    cache = init_rglru_cache(b, cfg)
+    return rglru_block_apply(p, cfg, x, cache=cache)

@@ -1,0 +1,86 @@
+"""Jit-able train / prefill / serve step factories for the decoder models.
+
+These are the functions the launcher lowers in the multi-pod dry-run and the
+federated engine calls for client-local training.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.models.config import ArchConfig
+from repro.optim.optimizers import Optimizer
+from repro.utils.pytree import PyTree
+
+
+def init_train_state(rng, cfg: ArchConfig, optimizer: Optimizer) -> PyTree:
+    params = decoder.model_init(rng, cfg)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def cast_for_compute(params: PyTree, cfg: ArchConfig) -> PyTree:
+    """bf16 forward copy of the f32 master weights, made ONCE before the
+    layer scan so FSDP all-gathers move bf16, not f32 (§Perf). Routers
+    stay f32 (routing logits are precision-sensitive)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.utils.pytree import tree_map_with_path
+
+    def one(path, leaf):
+        name = path.split("/")[-1]
+        if leaf.dtype == jnp.float32 and leaf.ndim >= 1 \
+                and name not in ("router", "lam", "b_a", "b_x", "b_if",
+                                 "b_in"):
+            return leaf.astype(cdt)
+        return leaf
+
+    return tree_map_with_path(one, params)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    lr_schedule: Callable) -> Callable:
+    def train_step(state: PyTree, batch: dict) -> tuple[PyTree, dict]:
+        def loss_fn(params):
+            return decoder.loss_and_metrics(
+                cast_for_compute(params, cfg), cfg, batch)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        lr = lr_schedule(state["step"])
+        params, opt = optimizer.update(state["params"], grads,
+                                       state["opt"], lr)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = dict(metrics, lr=lr,
+                       grad_norm=_global_norm(grads))
+        return new_state, metrics
+
+    return train_step
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def make_prefill_step(cfg: ArchConfig, *, capacity: int,
+                      force_window: int = 0) -> Callable:
+    def prefill_step(params: PyTree, batch: dict):
+        caches, logits = decoder.prefill(params, cfg, batch,
+                                         capacity=capacity,
+                                         force_window=force_window)
+        return caches, logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, force_window: int = 0) -> Callable:
+    def serve_step(params: PyTree, caches: PyTree, tokens, t):
+        logits, new_caches = decoder.decode_step(
+            params, cfg, tokens, t, caches, force_window=force_window)
+        return logits, new_caches
+
+    return serve_step

@@ -1,0 +1,281 @@
+"""xLSTM blocks — mLSTM (matrix memory) and sLSTM (scalar memory),
+following arXiv:2405.04517.
+
+* **mLSTM** is parallelizable: training/prefill uses the *chunkwise* form
+  (intra-chunk quadratic attention-like term + inter-chunk recurrent state
+  ``(C, n, m)`` carried by ``lax.scan``), decode is the O(1) recurrent step.
+  Exponential input gate + sigmoid forget gate with the paper's max-state
+  ``m`` stabilization.
+* **sLSTM** has hidden-to-gate recurrence (R matrices, block-diagonal per
+  head) and is inherently sequential: training scans over time.
+
+Both blocks are self-contained (the assignment's ``d_ff=0``): mLSTM wraps the
+cell in up/gate/down projections (pf=2), sLSTM follows with a small gated MLP
+(pf=4/3). Simplifications vs. the reference implementation (learnable skip
+scales, bias init schedules) are noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ArchConfig
+from repro.sharding.api import constrain
+
+_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array   # (B, H, hd, hd) matrix memory
+    n: jax.Array   # (B, H, hd) normalizer
+    m: jax.Array   # (B, H) stabilizer
+    conv: jax.Array  # (B, w-1, d_inner) trailing conv inputs
+
+
+def mlstm_init(rng, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    di = 2 * d                      # pf = 2 up-projection
+    h = cfg.n_heads
+    hd = di // h
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": nn.normal_init(ks[0], (d, di), std=d ** -0.5, dtype=dtype),
+        "w_gate": nn.normal_init(ks[1], (d, di), std=d ** -0.5, dtype=dtype),
+        "conv_w": nn.normal_init(ks[2], (4, di), std=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": nn.normal_init(ks[3], (di, di), std=di ** -0.5, dtype=dtype),
+        "wk": nn.normal_init(ks[4], (di, di), std=di ** -0.5, dtype=dtype),
+        "wv": nn.normal_init(ks[5], (di, di), std=di ** -0.5, dtype=dtype),
+        "w_if": nn.normal_init(ks[6], (di, 2 * h), std=di ** -0.5,
+                               dtype=dtype),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+                                ).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_down": nn.normal_init(ks[7], (di, d), std=di ** -0.5, dtype=dtype),
+    }
+
+
+def init_mlstm_cache(batch: int, cfg: ArchConfig) -> MLSTMCache:
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = di // h
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, 3, di), jnp.dtype(cfg.compute_dtype)),
+    )
+
+
+def _mlstm_chunk(q, k, v, lf, li, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,hd) fp32 (k pre-scaled by hd^-0.5); lf, li: (B,H,L) log
+    forget / log input gates; state: (c, n, m).
+    """
+    c_prev, n_prev, m_prev = state
+    b = jnp.cumsum(lf, axis=-1)                       # inclusive Σ log f
+    btot = b[..., -1:]                                # (B,H,1)
+    # intra-chunk decay matrix D[t,s] = b_t − b_s + ĩ_s  (s ≤ t)
+    dmat = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    ltri = jnp.tril(jnp.ones(dmat.shape[-2:], bool))
+    dmat = jnp.where(ltri, dmat, -1e30)
+    m_intra = jnp.max(dmat, axis=-1)                  # (B,H,L)
+    m_inter = b + m_prev[..., None]
+    m_t = jnp.maximum(m_inter, m_intra)
+    dexp = jnp.exp(dmat - m_t[..., None])
+    s_intra = jnp.einsum("bhtd,bhsd->bhts", q, k) * dexp
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", s_intra, v)
+    n_intra = jnp.sum(s_intra, axis=-1)
+    w_inter = jnp.exp(m_inter - m_t)                  # (B,H,L)
+    h_inter = jnp.einsum("bhtd,bhdv->bhtv", q, c_prev) * w_inter[..., None]
+    n_inter = jnp.einsum("bhtd,bhd->bht", q, n_prev) * w_inter
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_t))
+    h_out = (h_intra + h_inter) / denom[..., None]
+    # ---- state update to chunk end ----
+    g = btot - b + li                                 # B − b_s + ĩ_s
+    m_new = jnp.maximum(btot[..., 0] + m_prev, jnp.max(g, axis=-1))
+    wkv = jnp.exp(g - m_new[..., None])               # (B,H,L)
+    c_new = (jnp.exp(btot[..., 0] + m_prev - m_new)[..., None, None] * c_prev
+             + jnp.einsum("bhsd,bhsv,bhs->bhdv", k, v, wkv))
+    n_new = (jnp.exp(btot[..., 0] + m_prev - m_new)[..., None] * n_prev
+             + jnp.einsum("bhsd,bhs->bhd", k, wkv))
+    return h_out, (c_new, n_new, m_new)
+
+
+def _mlstm_sequence(q, k, v, lf, li, state, chunk: int):
+    """Chunkwise scan. q,k,v: (B,H,S,hd); returns (h (B,H,S,hd), state)."""
+    b_, h_, s, hd = q.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+
+    def split(x):
+        return x.reshape(x.shape[:2] + (nc, chunk) + x.shape[3:]) \
+                .transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qs, ks_, vs = split(q), split(k), split(v)
+    lfs = lf.reshape(b_, h_, nc, chunk).transpose(2, 0, 1, 3)
+    lis = li.reshape(b_, h_, nc, chunk).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        qc, kc, vc, lfc, lic = xs
+        h_out, new = _mlstm_chunk(qc, kc, vc, lfc, lic, carry)
+        return new, h_out
+
+    body = jax.checkpoint(body)
+    state, hs = jax.lax.scan(body, state, (qs, ks_, vs, lfs, lis))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(b_, h_, s, hd)
+    return hs, state
+
+
+def mlstm_block_apply(p, cfg: ArchConfig, x, *, cache: MLSTMCache | None):
+    """x: (B, S, D). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    hd = di // h
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    up = xc @ p["w_up"].astype(cdt)
+    gate = xc @ p["w_gate"].astype(cdt)
+    up = constrain(up, ("batch", None, "ffn"))
+    # causal conv (width 4) on the cell branch
+    w = p["conv_w"].shape[0]
+    if cache is not None:
+        xp = jnp.concatenate([cache.conv.astype(up.dtype), up], axis=1)
+        new_conv = xp[:, -(w - 1):]
+    else:
+        xp = jnp.pad(up, ((0, 0), (w - 1, 0), (0, 0)))
+        new_conv = None
+    conv = jnp.zeros_like(up, dtype=jnp.float32)
+    for j in range(w):
+        conv = conv + xp[:, j: j + s].astype(jnp.float32) \
+            * p["conv_w"][j].astype(jnp.float32)
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(cdt)
+
+    def heads(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+
+    q = heads(conv @ p["wq"].astype(cdt)).astype(jnp.float32)
+    k = heads(conv @ p["wk"].astype(cdt)).astype(jnp.float32) * hd ** -0.5
+    v = heads(up @ p["wv"].astype(cdt)).astype(jnp.float32)
+    if_ = conv.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) \
+        + p["b_if"]
+    li = if_[..., :h].transpose(0, 2, 1)                 # log input gate ĩ
+    lf = jax.nn.log_sigmoid(if_[..., h:]).transpose(0, 2, 1)
+
+    if cache is None:
+        state = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                 jnp.zeros((b, h, hd), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+        hs, _ = _mlstm_sequence(q, k, v, lf, li, state, _CHUNK)
+        new_cache = None
+    else:
+        state = (cache.c, cache.n, cache.m)
+        if s == 1:
+            hs, state = _mlstm_chunk(q, k, v, lf, li, state)
+        else:
+            hs, state = _mlstm_sequence(q, k, v, lf, li, state, _CHUNK)
+        new_cache = MLSTMCache(c=state[0], n=state[1], m=state[2],
+                               conv=new_conv)
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, di)
+    hs = nn.rmsnorm_apply({"scale": p["norm_scale"]}, hs.astype(cdt))
+    out = (hs * jax.nn.silu(gate)) @ p["w_down"].astype(cdt)
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMCache(NamedTuple):
+    h: jax.Array  # (B, D)
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+def slstm_init(rng, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(rng, 4)
+    # recurrent matrices are block-diagonal per head: (H, hd, hd) per gate
+    return {
+        "w_in": nn.normal_init(ks[0], (d, 4 * d), std=d ** -0.5, dtype=dtype),
+        "b_in": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+             jnp.zeros((d,))]).astype(jnp.float32),
+        "r": nn.normal_init(ks[1], (4, h, hd, hd), std=hd ** -0.5,
+                            dtype=dtype),
+        "norm_scale": jnp.ones((d,), dtype),
+        "w_up": nn.normal_init(ks[2], (d, 2 * d), std=d ** -0.5, dtype=dtype),
+        "w_down": nn.normal_init(ks[3], (d, d), std=d ** -0.5, dtype=dtype),
+    }
+
+
+def init_slstm_cache(batch: int, cfg: ArchConfig) -> SLSTMCache:
+    d = cfg.d_model
+    return SLSTMCache(h=jnp.zeros((batch, d), jnp.float32),
+                      c=jnp.zeros((batch, d), jnp.float32),
+                      n=jnp.zeros((batch, d), jnp.float32),
+                      m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_step(p, cfg: ArchConfig, wx_t, state: SLSTMCache) -> tuple:
+    """wx_t: (B, 4D) precomputed input projection for one timestep."""
+    d = cfg.d_model
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    hprev = state.h.reshape(-1, h_heads, hd)
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->gbhe", hprev, r)  # (4, B, H, hd)
+    rec = rec.reshape(4, -1, d)
+    pre = wx_t.astype(jnp.float32) + p["b_in"] \
+        + jnp.concatenate([rec[0], rec[1], rec[2], rec[3]], axis=-1)
+    z, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_)
+    lf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(lf + state.m, i_)
+    iexp = jnp.exp(i_ - m_new)
+    fexp = jnp.exp(lf + state.m - m_new)
+    c_new = fexp * state.c + iexp * z
+    n_new = jnp.maximum(fexp * state.n + iexp, 1e-6)
+    h_new = o * c_new / n_new
+    return SLSTMCache(h=h_new, c=c_new, n=n_new, m=m_new), h_new
+
+
+def slstm_block_apply(p, cfg: ArchConfig, x, *, cache: SLSTMCache | None):
+    """x: (B, S, D). Sequential scan over time (sLSTM is not parallel)."""
+    b, s, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    wx = x.astype(cdt) @ p["w_in"].astype(cdt)        # (B,S,4D)
+    state = cache if cache is not None else init_slstm_cache(b, cfg)
+    if s == 1:
+        state, h_new = _slstm_step(p, cfg, wx[:, 0], state)
+        hs = h_new[:, None, :]
+    else:
+        def body(st, wx_t):
+            st, h_new = _slstm_step(p, cfg, wx_t, st)
+            return st, h_new
+
+        state, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    hs = nn.rmsnorm_apply({"scale": p["norm_scale"]}, hs.astype(cdt))
+    up = hs @ p["w_up"].astype(cdt)
+    g, u = jnp.split(up, 2, axis=-1)
+    out = (nn.gelu(g) * u) @ p["w_down"].astype(cdt)
+    new_cache = state if cache is not None else None
+    return out.astype(x.dtype), new_cache

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    sgd,
+    sgd_momentum,
+    adamw,
+    make_optimizer,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_lr,
+    cosine_decay_lr,
+    warmup_cosine_lr,
+)

@@ -1,0 +1,107 @@
+"""From-scratch optimizers (the container has no optax).
+
+An :class:`Optimizer` is a pair of pure functions over pytrees:
+
+    state  = opt.init(params)
+    params, state = opt.update(params, grads, state, lr=...)
+
+The federated engine vmaps ``update`` over a leading client axis, so all
+optimizer state must be a pytree of arrays (no Python-side mutation).
+
+The paper's experiments use plain SGD (§VI-A, lr 0.01); AdamW is provided for
+the LLM-scale configs and the beyond-paper runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+    # number of bytes of state per fp32 parameter (for memory accounting)
+    state_factor: float = 0.0
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+        return new_params, {"count": state["count"] + 1}
+
+    return Optimizer("sgd", init, update, state_factor=0.0)
+
+
+def sgd_momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, lr):
+        mom = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                           state["mom"], grads)
+        if nesterov:
+            step = jax.tree.map(lambda m, g: g.astype(m.dtype) + beta * m,
+                                mom, grads)
+        else:
+            step = mom
+        new_params = jax.tree.map(lambda p, s: p - lr * s.astype(p.dtype),
+                                  params, step)
+        return new_params, {"count": state["count"] + 1, "mom": mom}
+
+    return Optimizer("sgd_momentum", init, update, state_factor=1.0)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(params, grads, state, lr):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def _step(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(_step, params, m, v)
+        return new_params, {"count": c, "m": m, "v": v}
+
+    return Optimizer("adamw", init, update, state_factor=2.0)
+
+
+_REGISTRY: dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "sgd_momentum": sgd_momentum,
+    "adamw": adamw,
+}
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

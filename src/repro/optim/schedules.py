@@ -1,0 +1,29 @@
+"""Learning-rate schedules as pure ``step -> lr`` callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, jnp.float32)
+    return schedule
+
+
+def cosine_decay_lr(lr: float, total_steps: int, final_frac: float = 0.1):
+    def schedule(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return schedule
+
+
+def warmup_cosine_lr(lr: float, warmup_steps: int, total_steps: int,
+                     final_frac: float = 0.1):
+    cos = cosine_decay_lr(lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def schedule(step):
+        warm = lr * jnp.minimum(1.0, step / max(1, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return schedule

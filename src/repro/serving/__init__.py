@@ -1,0 +1,1 @@
+from repro.serving.batching import BatchingServer, Request  # noqa: F401

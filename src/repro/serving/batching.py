@@ -1,0 +1,118 @@
+"""Continuous-batching serving loop (production serving substrate).
+
+The decode dry-run shapes prove one `serve_step` lowers at scale; this
+module turns it into an actual server: a slot-based scheduler that admits
+requests into a fixed-size decode batch, steps ALL active slots with one
+jitted vmapped `decode_step` per token (the vLLM-style inner loop, shaped
+like the decode_32k workload), retires finished sequences, and back-fills
+free slots from the queue.
+
+Design notes:
+  * each slot owns a single-sequence cache pytree (so per-slot ring
+    positions / write indices stay independent); the jitted step stacks
+    them on a leading slot axis and vmaps `decode_step` — the compiled
+    program has the fixed (n_slots, …) decode batch shape the dry-run
+    shards over the mesh, and never recompiles;
+  * prefill happens per-request at admission, producing the slot's cache;
+  * empty slots decode padding tokens against their stale cache and are
+    simply ignored by the scheduler.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.models.config import ArchConfig
+from repro.utils.pytree import PyTree, tree_stack, tree_unstack
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray            # (S,) int32
+    max_new_tokens: int
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class BatchingServer:
+    def __init__(self, cfg: ArchConfig, params: PyTree, *, n_slots: int = 4,
+                 capacity: int = 256):
+        if cfg.n_codebooks:
+            raise NotImplementedError("codebook archs: use per-stream "
+                                      "decoding")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.slot_caches = [decoder.init_caches(cfg, 1, capacity)
+                            for _ in range(n_slots)]
+        self.pos = [0] * n_slots
+        self.active: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+
+        def step(params, stacked_caches, tokens, t_vec):
+            def one(cache, tok, t):
+                logits, new_cache = decoder.decode_step(
+                    params, cfg, tok[None], t, cache)
+                return logits[0, 0], new_cache
+
+            return jax.vmap(one)(stacked_caches, tokens, t_vec)
+
+        self._step = jax.jit(step)
+        self._prefill = jax.jit(
+            lambda params, batch: decoder.prefill(params, cfg, batch,
+                                                  capacity=capacity))
+
+    # -- queue management ----------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            caches, logits = self._prefill(
+                self.params, {"tokens": req.prompt[None]})
+            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            self.slot_caches[slot] = caches
+            self.pos[slot] = int(req.prompt.shape[-1])
+            self.active[slot] = req
+
+    # -- the serving loop ------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + decode one token for every active slot. Returns the
+        number of active requests after the step."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = jnp.asarray(
+            [[r.generated[-1] if r else 0] for r in self.active],
+            jnp.int32)
+        t_vec = jnp.asarray(self.pos, jnp.int32)
+        stacked = tree_stack(self.slot_caches)
+        logits, new_stacked = self._step(self.params, stacked, tokens,
+                                         t_vec)
+        self.slot_caches = tree_unstack(new_stacked)
+        nxt = jax.device_get(jnp.argmax(logits, axis=-1))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            req.generated.append(int(nxt[slot]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None
+        return sum(r is not None for r in self.active)
+
+    def run(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(r is None for r in self.active):
+                break

@@ -1,0 +1,101 @@
+"""Logical-axis sharding API.
+
+Model code never names mesh axes directly; it annotates arrays with *logical*
+axes (``constrain(x, ("batch", "seq", "embed"))``) and parameter leaves get
+logical axes from name-based rules (:mod:`repro.sharding.rules`). A
+:class:`ShardingContext` installed by the launcher maps logical names →
+mesh axes and applies ``with_sharding_constraint``; without a context every
+call is the identity, so the same model code runs unsharded on CPU tests.
+
+Assignment is greedy and divisibility-aware: for each tensor dim the first
+mesh axis (or axis tuple) from the rule that (a) is not already used by an
+earlier dim and (b) divides the dim size is taken; otherwise the dim falls
+back to the next candidate in the rule list, then to unsharded. This is how
+e.g. a KV cache declared ``("batch", None, "kv_heads", "kv_head_dim")`` ends
+up head-sharded for 32-head models but head_dim-sharded for 8-KV-head models
+on a 16-way tensor axis.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# a rule value: list of candidate mesh-axis assignments, each a str or tuple
+Rule = list
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: dict[str, Rule] = field(default_factory=dict)
+    enabled: bool = True
+
+    def _axis_size(self, mesh_ax) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(mesh_ax, str):
+            return sizes[mesh_ax]
+        n = 1
+        for m in mesh_ax:
+            n *= sizes[m]
+        return n
+
+    def spec(self, logical_axes: tuple, shape: tuple | None = None) -> P:
+        assigned: list = []
+        used: set[str] = set()
+        for i, ax in enumerate(logical_axes):
+            if ax is None:
+                assigned.append(None)
+                continue
+            candidates = self.rules.get(ax) or []
+            if isinstance(candidates, (str, tuple)):
+                candidates = [candidates]
+            pick = None
+            for cand in candidates:
+                if cand is None:
+                    break
+                flat = (cand,) if isinstance(cand, str) else tuple(cand)
+                if any(m in used for m in flat):
+                    continue
+                if shape is not None and shape[i] % self._axis_size(cand):
+                    continue
+                pick = cand
+                used.update(flat)
+                break
+            assigned.append(pick)
+        return P(*assigned)
+
+    def sharding(self, logical_axes: tuple,
+                 shape: tuple | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def current() -> ShardingContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextmanager
+def use_sharding(ctx: ShardingContext | None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; identity w/o context."""
+    ctx = current()
+    if ctx is None or not ctx.enabled:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"logical axes {logical_axes} do not match rank {x.ndim}")
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical_axes, tuple(x.shape)))

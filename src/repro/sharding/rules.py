@@ -1,0 +1,230 @@
+"""Parameter/activation sharding rules for the production meshes.
+
+Parameters get logical axes from their leaf *name* (the trailing dict key)
+via :func:`param_logical_axes`; extra leading dims (layer-stacking, client
+axis) are padded with None / 'clients'. The launcher builds a rule table per
+(mesh, mode) with :func:`make_rules` and installs it as a
+:class:`~repro.sharding.api.ShardingContext`.
+
+Default layout (single pod, 16×16 ``(data, model)``):
+
+  * **tensor parallel** over ``model``: head/ffn/vocab dims, MoE expert d_ff
+    (ETP), RG-LRU channels, latent dims;
+  * **FSDP** over ``data``: the other matmul dim of every weight (ZeRO-3 —
+    params and optimizer state are fully sharded);
+  * **activations**: batch over ``data`` (+``pod``), residual-stream seq dim
+    over ``model`` (Megatron-style sequence parallelism) in train/prefill;
+  * **federated state**: client axis over ``pod``.
+
+``expert_parallel=True`` flips MoE expert weights to be sharded over experts
+(EP) instead of d_ff — the §Perf alternative that introduces all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.sharding.api import Rule, ShardingContext
+
+# name -> logical axes of the TRAILING dims (leading dims padded with None)
+_PARAM_AXES: dict[str, tuple] = {
+    # embeddings / heads
+    "table": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # attention
+    "wq": ("embed", "heads_flat"),
+    "wk": ("embed", "kv_flat"),
+    "wv": ("embed", "kv_flat"),
+    "wo": ("heads_flat", "embed"),
+    # MLA
+    "wq_a": ("embed", "lora"),
+    "wq_b": ("lora", "heads_flat"),
+    "wkv_a": ("embed", "lora"),
+    "wk_b": ("kv_lora", "heads_flat"),
+    "wv_b": ("kv_lora", "heads_flat"),
+    # dense FFN
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+    # router
+    "router": ("embed", None),
+    # RG-LRU
+    "w_gate_branch": ("embed", "rnn"),
+    "w_rnn_branch": ("embed", "rnn"),
+    "w_out": ("rnn", "embed"),
+    "w_a": ("embed", "rnn"),
+    "w_x": ("embed", "rnn"),
+    "b_a": ("rnn",),
+    "b_x": ("rnn",),
+    "lam": ("rnn",),
+    "conv_w": (None, "rnn"),
+    "conv_b": ("rnn",),
+    # xLSTM
+    "w_in": ("embed", "ffn"),
+    "w_if": ("ffn", None),
+    "r": (None, None, None, None),
+    "b_if": (None,),
+    "b_in": (None,),
+    "norm_scale": (None,),
+    # norms / scalars
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# MoE expert tensors are disambiguated by rank (they live under 'ffn' too)
+_MOE_AXES = {
+    "w_gate": ("experts", "embed", "expert_ffn"),
+    "w_up": ("experts", "embed", "expert_ffn"),
+    "w_down": ("experts", "expert_ffn", "embed"),
+}
+
+
+def param_logical_axes(path: str, leaf: Any) -> tuple:
+    parts = path.split("/")
+    name = parts[-1]
+    base: tuple | None = None
+    if name in _MOE_AXES and leaf.ndim >= 3 and "shared" not in parts:
+        base = _MOE_AXES[name]
+    elif name in _PARAM_AXES:
+        base = _PARAM_AXES[name]
+    if base is None:
+        base = (None,) * leaf.ndim
+    if len(base) > leaf.ndim:
+        base = base[-leaf.ndim:]
+    pad = leaf.ndim - len(base)
+    return (None,) * pad + tuple(base)
+
+
+def params_pspecs(ctx: ShardingContext, params, *, client_axis: bool = False):
+    """PartitionSpecs for a (possibly client-stacked) param pytree."""
+    from repro.utils.pytree import tree_map_with_path
+
+    def one(path, leaf):
+        axes = param_logical_axes(path, leaf)
+        if client_axis:
+            axes = ("clients",) + axes[1:]
+        return ctx.spec(axes, tuple(leaf.shape))
+
+    return tree_map_with_path(one, params)
+
+
+def make_rules(*, multi_pod: bool, mode: str,
+               expert_parallel: bool = False,
+               fsdp: bool = True, seq_parallel: bool = True,
+               context_parallel_attn: bool = False,
+               kv_divisible: bool = True
+               ) -> dict[str, Rule]:
+    """Build the logical→mesh table.
+
+    mode: 'train' | 'prefill' | 'decode'.
+
+    ``context_parallel_attn``: shard the attention *query seq* dim over
+    ``model`` instead of heads — the launcher sets this when n_heads does
+    not divide the model axis (e.g. qwen2-vl's 28 heads on 16-way TP).
+
+    The KV *head_dim* is never sharded in train/prefill: it is the QKᵀ
+    contracting dim, and sharding it makes XLA all-reduce the (B,H,Sq,Sk)
+    score tensor — orders of magnitude more traffic than replicating K/V
+    (§Perf iteration 1). In decode the scores are (B,H,1,C) ≈ tiny while
+    the KV cache is huge, so there head_dim sharding is the right call.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fsdp_ax: Rule = ["data"] if fsdp else []
+    model: Rule = ["model"]
+    rules: dict[str, Rule] = {
+        # --- parameters ---
+        "vocab": model,
+        "embed": fsdp_ax,
+        "heads_flat": model,
+        "kv_flat": model,
+        "lora": model,
+        "kv_lora": model,
+        "ffn": model,
+        "expert_ffn": [] if expert_parallel else model,
+        "experts": model if expert_parallel else [],
+        # MoE token groups: under ETP shard groups as much as divisibility
+        # allows; under EP leave `model` to the experts dim (the
+        # group→expert resharding of the dispatch einsum is the all-to-all)
+        "moe_groups": ["data"] if expert_parallel
+        else [("data", "model"), "data", "model"],
+        "rnn": model,
+        # --- activations ---
+        "batch": [dp if multi_pod else "data"],
+        # decode with kv_heads ∤ model: q must follow the cache's
+        # *head_dim* sharding (heads off) or GSPMD re-shards the whole
+        # cache every token (§Perf D1); scores then partial-AR, which is
+        # tiny for 1-token queries
+        "heads": [] if (context_parallel_attn
+                        or (mode == "decode" and not kv_divisible))
+        else model,
+        "kv_heads": [] if context_parallel_attn else model,
+        "kv_head_dim": model if mode == "decode" else [],
+        "qseq": model if (context_parallel_attn
+                          and mode in ("train", "prefill")) else [],
+        # --- federated state ---
+        "clients": ["pod"] if multi_pod else ["data"],
+    }
+    if mode in ("train", "prefill") and seq_parallel:
+        rules["seq"] = model
+    else:
+        rules["seq"] = []
+    return rules
+
+
+def batch_pspecs(ctx: ShardingContext, batch: dict):
+    """Input-batch shardings: leading batch dim over data(+pod)."""
+    out = {}
+    for k, v in batch.items():
+        if k == "pos3":                      # (3, B, S)
+            out[k] = ctx.spec((None, "batch", None), tuple(v.shape))
+        elif hasattr(v, "ndim") and v.ndim >= 1:
+            out[k] = ctx.spec(("batch",) + (None,) * (v.ndim - 1),
+                              tuple(v.shape))
+        else:
+            out[k] = ctx.spec((), ())
+    return out
+
+
+def cache_logical_axes(path: str, leaf) -> tuple:
+    """Trailing-dim logical axes by leaf name; leading (layer-stack) dims are
+    padded with None. States that are tiny either way stay unannotated."""
+    name = path.split("/")[-1]
+    nd = leaf.ndim
+    if name in ("k", "v"):                  # (B, C, Kv, hd)
+        base = ("batch", None, "kv_heads", "kv_head_dim")
+    elif name == "ckv":                     # (B, C, d_c)
+        base = ("batch", None, "kv_lora")
+    elif name == "krope":
+        base = ("batch", None, None)
+    elif name == "conv":                    # (B, w−1, d)
+        base = ("batch", None, "rnn")
+    elif name == "c" and nd >= 4:           # mLSTM matrix memory
+        base = ("batch", "heads", None, None)
+    elif name == "h":                       # RG-LRU / sLSTM state (B, D)
+        base = ("batch", "rnn")
+    elif name in ("c", "n", "m"):
+        base = (None,) * nd                 # small scalar-memory states
+    elif name in ("pos", "idx"):
+        base = (None,) * nd
+    else:
+        base = ("batch",) + (None,) * max(0, nd - 1)
+    base = tuple(base)[-nd:] if len(base) > nd else tuple(base)
+    return (None,) * (nd - len(base)) + base
+
+
+def cache_pspecs(ctx: ShardingContext, caches, *, stacked: bool):
+    """Specs for the decode caches produced by ``decoder.init_caches``.
+
+    ``stacked``: leaves of scanned segments carry a leading layer dim.
+    """
+    from repro.utils.pytree import tree_map_with_path
+
+    def one(path, leaf):
+        axes = cache_logical_axes(path, leaf)
+        if len(axes) < leaf.ndim:
+            axes = (None,) * (leaf.ndim - len(axes)) + tuple(axes)
+        return ctx.spec(axes, tuple(leaf.shape))
+
+    del stacked
+    return tree_map_with_path(one, caches)

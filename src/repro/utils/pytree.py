@@ -1,0 +1,142 @@
+"""Pytree utilities used across the framework.
+
+All federated state in this framework is a pytree (nested dicts of
+jnp.ndarray); these helpers implement the vector-space algebra the
+CC-FedAvg math needs (x + Δ, masked means over a client axis, norms) plus
+generic introspection (param counting, dtype casting).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_ones_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.ones_like, a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_where(mask, a: PyTree, b: PyTree) -> PyTree:
+    """Leafwise ``where`` with a scalar/broadcastable mask."""
+    return jax.tree.map(lambda x, y: jnp.where(mask, x, y), a, b)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_sq_norm(a: PyTree) -> jax.Array:
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_cosine(a: PyTree, b: PyTree, eps: float = 1e-12) -> jax.Array:
+    """Cosine similarity between two pytrees flattened to vectors."""
+    return tree_dot(a, b) / (tree_norm(a) * tree_norm(b) + eps)
+
+
+def tree_euclidean(a: PyTree, b: PyTree) -> jax.Array:
+    return tree_norm(tree_sub(a, b))
+
+
+def tree_stack(trees: list[PyTree], axis: int = 0) -> PyTree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=axis), *trees)
+
+
+def tree_unstack(tree: PyTree, axis: int = 0) -> list[PyTree]:
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[axis]
+    out = []
+    for i in range(n):
+        out.append(treedef.unflatten([jnp.take(l, i, axis=axis) for l in leaves]))
+    return out
+
+
+def tree_index(tree: PyTree, idx) -> PyTree:
+    """Index the leading axis of every leaf (e.g. select one client)."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def tree_broadcast_clients(tree: PyTree, n_clients: int) -> PyTree:
+    """Tile a pytree along a new leading client axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), tree
+    )
+
+
+def tree_masked_mean(tree: PyTree, mask: jax.Array, axis: int = 0,
+                     eps: float = 1e-12) -> PyTree:
+    """Mean over the leading (client) axis weighted by ``mask``.
+
+    ``mask`` has shape (n_clients,); leaves have shape (n_clients, ...).
+    Equivalent to ``(1/|S_t|) Σ_{i∈S_t}`` in the paper's aggregation (Eq. 3).
+    """
+    denom = jnp.maximum(jnp.sum(mask), eps)
+
+    def _mean(x):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * m, axis=axis) / denom.astype(x.dtype)
+
+    return jax.tree.map(_mean, tree)
+
+
+def tree_count_params(tree: PyTree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)))
+
+
+def tree_all_finite(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.map(lambda x: jnp.all(jnp.isfinite(x)), tree)
+    return functools.reduce(jnp.logical_and, jax.tree.leaves(leaves))
+
+
+def tree_map_with_path(fn: Callable, tree: PyTree) -> PyTree:
+    """Map ``fn(path_str, leaf)`` over a tree; path is '/'-joined dict keys."""
+
+    def _name(entry) -> str:
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.SequenceKey):
+            return str(entry.idx)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+        return str(entry)
+
+    def _fn(path, leaf):
+        return fn("/".join(_name(p) for p in path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

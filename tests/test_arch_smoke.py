@@ -1,0 +1,193 @@
+"""Per-architecture smoke tests (deliverable f): each assigned arch's
+REDUCED variant (2 layers, d_model≤256, ≤4 experts) runs one forward/train
+step plus a prefill→decode round-trip on CPU; asserts output shapes and
+finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, is_subquadratic
+from repro.models import decoder
+from repro.models.steps import (init_train_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.utils.pytree import tree_all_finite
+
+B, S = 2, 32
+
+
+def _batch(cfg, key, b=B, s=S):
+    batch = {"tokens": jax.random.randint(
+        key, ((b, cfg.n_codebooks, s) if cfg.n_codebooks else (b, s)),
+        0, cfg.vocab)}
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jax.random.normal(
+            key, (b, cfg.n_vision_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+        batch["pos3"] = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (3, b, s))
+    elif cfg.mrope_sections:
+        batch["pos3"] = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (3, b, s))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    return request.param
+
+
+def test_reduced_config_is_reduced(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+
+
+def test_train_step(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    opt = sgd()
+    state = init_train_state(rng, cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, constant_lr(0.01)))
+    batch = _batch(cfg, jax.random.fold_in(rng, 1))
+    new_state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0.0
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert bool(tree_all_finite(new_state["params"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        state["params"], new_state["params"]))
+    assert max(moved) > 0.0
+
+
+def test_prefill_then_decode(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    params = decoder.model_init(rng, cfg)
+    batch = _batch(cfg, jax.random.fold_in(rng, 2))
+    capacity = S + 4
+    prefill = jax.jit(make_prefill_step(cfg, capacity=capacity))
+    caches, logits = prefill(params, batch)
+    vshape = (B, 1, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks \
+        else (B, 1, cfg.vocab)
+    assert logits.shape == vshape
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    serve = jax.jit(make_decode_step(cfg))
+    tok = jnp.ones((B, cfg.n_codebooks, 1), jnp.int32) if cfg.n_codebooks \
+        else jnp.ones((B, 1), jnp.int32)
+    logits2, caches = serve(params, caches, tok, jnp.asarray(S, jnp.int32))
+    assert logits2.shape == vshape
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_decode_consistency_with_full_forward(arch, rng):
+    """Greedy decode logits from the cache path match re-running the
+    whole prefix through prefill (teacher-forcing equivalence)."""
+    cfg = get_config(arch, reduced=True)
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=64)   # window > test seq
+    if cfg.moe is not None:
+        # lossless dispatch: capacity drops differ between the 12-token
+        # prefill and the 1-token decode groups, so remove them
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    params = decoder.model_init(rng, cfg)
+    key = jax.random.fold_in(rng, 3)
+    s0, s1 = 8, 12
+    full = _batch(cfg, key, b=1, s=s1)
+    prefix = jax.tree.map(
+        lambda x: x[..., :s0] if x.dtype == jnp.int32 and x.shape[-1] == s1
+        else (x[:, :, :s0] if x.ndim == 3 and x.shape[-1] == s1 else x),
+        full)
+    if "pos3" in full:
+        prefix["pos3"] = full["pos3"][:, :, :s0]
+    caches, _ = decoder.prefill(params, cfg, prefix, capacity=s1 + 1)
+    # feed tokens s0..s1-1 one by one; compare logits to full prefill
+    logits_steps = []
+    for t in range(s0, s1):
+        tok = (full["tokens"][:, :, t][:, :, None] if cfg.n_codebooks
+               else full["tokens"][:, t][:, None])
+        lg, caches = decoder.decode_step(params, cfg, tok,
+                                         jnp.asarray(t, jnp.int32), caches)
+        logits_steps.append(lg)
+    _, logits_full = decoder.prefill(params, cfg, full, capacity=s1 + 1)
+    a = np.asarray(logits_steps[-1], np.float32)
+    b = np.asarray(logits_full, np.float32)
+    # bf16 attention probs make the chunk-scan (prefill) and single-chunk
+    # (decode) paths differ in the last bit; ≥99% of logits must agree
+    # tightly and none wildly
+    close = np.isclose(a, b, atol=2e-2, rtol=2e-2)
+    assert close.mean() > 0.99, f"only {close.mean():.1%} of logits agree"
+    np.testing.assert_allclose(a, b, atol=0.25, rtol=0.5)
+
+
+def test_long_context_rule(arch):
+    cfg = get_config(arch)
+    from repro.configs import decode_window, shape_supported
+    from repro.models.config import INPUT_SHAPES
+    long = INPUT_SHAPES["long_500k"]
+    assert shape_supported(cfg, long)
+    w = decode_window(cfg, long)
+    if is_subquadratic(cfg):
+        assert w == 0          # native sub-quadratic path
+    else:
+        assert w > 0           # sliding-window carve-out
+
+
+def test_moe_router_load_balance(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is None:
+        pytest.skip("dense arch")
+    from repro.models import moe as moe_mod
+    x = jax.random.normal(rng, (2, 16, cfg.d_model))
+    p = moe_mod.moe_init(rng, cfg, jnp.float32)
+    out, aux = moe_mod.moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux))
+    # balanced-router aux loss lower-bounded by 1 (E · Σ f·P ≥ 1)
+    assert float(aux) >= 0.99
+
+
+def test_fp8_kv_cache_roundtrip(rng):
+    """fp8 cache storage (the HBM-fit knob for the big MHA decode caches):
+    prefill→decode still produces sane, finite logits close to bf16."""
+    cfg = get_config("phi3-mini-3.8b", reduced=True)
+    cfg8 = cfg.replace(kv_cache_dtype="float8_e4m3fn")
+    params = decoder.model_init(rng, cfg)
+    batch = _batch(cfg, jax.random.fold_in(rng, 5))
+    caches16, lg16 = decoder.prefill(params, cfg, batch, capacity=S + 2)
+    caches8, lg8 = decoder.prefill(params, cfg8, batch, capacity=S + 2)
+    k_leaf = jax.tree.leaves(caches8)[0]
+    tok = jnp.ones((B, 1), jnp.int32)
+    d16, _ = decoder.decode_step(params, cfg, tok,
+                                 jnp.asarray(S, jnp.int32), caches16)
+    d8, _ = decoder.decode_step(params, cfg8, tok,
+                                jnp.asarray(S, jnp.int32), caches8)
+    assert bool(jnp.all(jnp.isfinite(d8)))
+    # fp8 is coarse; require agreement in the bulk, not the tail
+    close = np.isclose(np.asarray(d8, np.float32),
+                       np.asarray(d16, np.float32), atol=0.5, rtol=0.5)
+    assert close.mean() > 0.9
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "recurrentgemma-9b"])
+def test_pallas_serve_path_matches_jnp(arch, rng):
+    """cfg.use_pallas routes prefill through the Pallas kernels (flash
+    attention / RG-LRU scan, interpret mode on CPU); logits must match
+    the jnp path."""
+    cfg = get_config(arch, reduced=True)
+    params = decoder.model_init(rng, cfg)
+    s = 128
+    batch = _batch(cfg, jax.random.fold_in(rng, 7), b=1, s=s)
+    _, lg_jnp = decoder.prefill(params, cfg, batch, capacity=s + 1)
+    _, lg_pl = decoder.prefill(params, cfg.replace(use_pallas=True), batch,
+                               capacity=s + 1)
+    np.testing.assert_allclose(np.asarray(lg_pl, np.float32),
+                               np.asarray(lg_jnp, np.float32),
+                               atol=3e-2, rtol=3e-2)

@@ -1,0 +1,231 @@
+"""Unit tests: optimizers, schedules, losses, pytree algebra, checkpoint."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import CheckpointManager, load_pytree, save_pytree
+from repro.models import losses, nn
+from repro.optim.optimizers import adamw, make_optimizer, sgd, sgd_momentum
+from repro.optim.schedules import (constant_lr, cosine_decay_lr,
+                                   warmup_cosine_lr)
+from repro.utils import pytree as pt
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_step():
+    opt = sgd()
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.full((3,), 2.0)}
+    new, _ = opt.update(params, grads, opt.init(params), 0.1)
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.8)
+
+
+def test_momentum_accumulates():
+    opt = sgd_momentum(beta=0.5)
+    params = {"w": jnp.zeros(())}
+    g = {"w": jnp.asarray(1.0)}
+    s = opt.init(params)
+    p1, s = opt.update(params, g, s, 1.0)     # mom=1   -> -1
+    p2, s = opt.update(p1, g, s, 1.0)         # mom=1.5 -> -2.5
+    assert float(p2["w"]) == pytest.approx(-2.5)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(b1=0.9, b2=0.999, eps=1e-8)
+    params = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.asarray([1.0, -1.0, 2.0, -0.5])}
+    new, _ = opt.update(params, g, opt.init(params), 1e-2)
+    # bias-corrected first Adam step = lr · sign(g)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               -1e-2 * np.sign(g["w"]), rtol=1e-4)
+
+
+def test_make_optimizer_registry():
+    assert make_optimizer("sgd").name == "sgd"
+    with pytest.raises(ValueError):
+        make_optimizer("nope")
+
+
+def test_schedules():
+    assert float(constant_lr(0.1)(1000)) == pytest.approx(0.1)
+    cos = cosine_decay_lr(1.0, 100, final_frac=0.1)
+    assert float(cos(0)) == pytest.approx(1.0)
+    assert float(cos(100)) == pytest.approx(0.1)
+    wc = warmup_cosine_lr(1.0, 10, 110)
+    assert float(wc(5)) == pytest.approx(0.5)
+    assert float(wc(10)) == pytest.approx(1.0, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_xent_matches_unchunked(rng):
+    b, s, d, v = 2, 32, 16, 50
+    hidden = jax.random.normal(rng, (b, s, d))
+    head = jax.random.normal(jax.random.fold_in(rng, 1), (d, v))
+    targets = jax.random.randint(jax.random.fold_in(rng, 2), (b, s), 0, v)
+    mask = jnp.ones((b, s)).at[:, -1].set(0.0)
+    l1, a1 = losses.chunked_causal_xent(hidden, targets, mask, head, chunk=8)
+    l2, a2 = losses.chunked_causal_xent(hidden, targets, mask, head, chunk=s)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-6)
+
+
+def test_codebook_xent_mean_of_heads(rng):
+    b, s, d, v, k = 2, 16, 8, 20, 3
+    hidden = jax.random.normal(rng, (b, s, d))
+    heads = jax.random.normal(jax.random.fold_in(rng, 1), (k, d, v))
+    targets = jax.random.randint(jax.random.fold_in(rng, 2), (b, k, s), 0, v)
+    mask = jnp.ones((b, s))
+    l, _ = losses.multihead_codebook_xent(hidden, targets, mask, heads,
+                                          chunk=8)
+    per = [losses.chunked_causal_xent(hidden, targets[:, j], mask, heads[j],
+                                      chunk=8)[0] for j in range(k)]
+    assert float(l) == pytest.approx(float(np.mean([float(x) for x in per])),
+                                     rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# nn primitives
+# ---------------------------------------------------------------------------
+
+
+def test_rope_preserves_norm(rng):
+    x = jax.random.normal(rng, (2, 8, 4, 32))
+    cos, sin = nn.rope_cos_sin(jnp.arange(8)[None, :], 32)
+    y = nn.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property(rng):
+    """RoPE: ⟨q_m, k_n⟩ depends only on m − n."""
+    hd = 16
+    q = jax.random.normal(rng, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, hd))
+
+    def dot_at(m, n):
+        cm, sm = nn.rope_cos_sin(jnp.asarray([[m]]), hd)
+        cn, sn = nn.rope_cos_sin(jnp.asarray([[n]]), hd)
+        qm = nn.apply_rope(q, cm, sm)
+        kn = nn.apply_rope(k, cn, sn)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+
+
+def test_mrope_sections_match_plain_rope_when_positions_equal(rng):
+    """If all three position rows are identical, M-RoPE == RoPE."""
+    hd, s = 32, 8
+    x = jax.random.normal(rng, (1, s, 2, hd))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    pos3 = jnp.broadcast_to(pos, (3, 1, s))
+    c1, s1 = nn.mrope_cos_sin(pos3, hd, (6, 5, 5))
+    c2, s2 = nn.rope_cos_sin(pos[None], hd)
+    y1 = nn.apply_rope(x, c1, s1)
+    y2 = nn.apply_rope(x, c2, s2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_rmsnorm_scale_invariance(rng):
+    p = nn.rmsnorm_init(16)
+    x = jax.random.normal(rng, (4, 16))
+    y1 = nn.rmsnorm_apply(p, x)
+    y2 = nn.rmsnorm_apply(p, 10.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pytree algebra (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=3, max_size=3),
+       st.lists(st.floats(-10, 10, allow_nan=False), min_size=3, max_size=3))
+@settings(max_examples=20, deadline=None)
+def test_tree_vector_space(a_vals, b_vals):
+    a = {"x": jnp.asarray(a_vals), "y": {"z": jnp.asarray(a_vals[:2])}}
+    b = {"x": jnp.asarray(b_vals), "y": {"z": jnp.asarray(b_vals[:2])}}
+    s = pt.tree_add(a, b)
+    d = pt.tree_sub(s, b)
+    for la, lb in zip(jax.tree.leaves(d), jax.tree.leaves(a)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5)
+
+
+@given(mask=st.lists(st.integers(0, 1), min_size=4, max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_masked_mean_matches_numpy(mask):
+    tree = {"w": jnp.arange(8, dtype=jnp.float32).reshape(4, 2)}
+    m = jnp.asarray(mask, jnp.float32)
+    got = pt.tree_masked_mean(tree, m)["w"]
+    if sum(mask) == 0:
+        np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+    else:
+        want = (np.arange(8).reshape(4, 2)
+                * np.asarray(mask)[:, None]).sum(0) / sum(mask)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_tree_cosine_bounds(rng):
+    a = {"w": jax.random.normal(rng, (16,))}
+    assert float(pt.tree_cosine(a, a)) == pytest.approx(1.0, abs=1e-5)
+    neg = pt.tree_scale(a, -1.0)
+    assert float(pt.tree_cosine(a, neg)) == pytest.approx(-1.0, abs=1e-5)
+
+
+def test_tree_stack_unstack_roundtrip(rng):
+    trees = [{"w": jax.random.normal(jax.random.fold_in(rng, i), (3,))}
+             for i in range(4)]
+    stacked = pt.tree_stack(trees)
+    back = pt.tree_unstack(stacked)
+    for t1, t2 in zip(trees, back):
+        np.testing.assert_allclose(np.asarray(t1["w"]), np.asarray(t2["w"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"params": {"w": jax.random.normal(rng, (4, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16)},
+            "opt": [{"m": jnp.ones((2,))}, {"v": jnp.ones((3,))}],
+            "step": jnp.asarray(7, jnp.int32)}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree, extra={"round": 3})
+    loaded, extra = load_pytree(path, like=tree)
+    assert extra["round"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((2,))}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree)
+    assert mgr.steps() == [3, 4]
+    restored, extra = mgr.restore(tree)
+    assert extra["step"] == 4
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "c.npz")
+    save_pytree(path, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        load_pytree(path, like={"w": jnp.zeros((3,))})

@@ -1,0 +1,94 @@
+"""Data pipeline: γ-partitioner, budget laws, federated stacking."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.federated import build_federated
+from repro.data.partition import (budget_law, partition_classes,
+                                  partition_gamma, skewed_budget_assignment,
+                                  two_group_budget)
+from repro.data.synthetic import make_dataset, train_test_split
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("gaussian", n=2000, dim=16, n_classes=10, seed=0)
+
+
+def test_gamma_partition_covers_everything(ds):
+    parts = partition_gamma(ds, 8, gamma=0.5, seed=0)
+    allidx = np.sort(np.concatenate(parts))
+    assert (allidx == np.arange(len(ds))).all()
+
+
+def test_gamma_zero_is_label_sorted_shards(ds):
+    parts = partition_gamma(ds, 10, gamma=0.0, seed=0)
+    # each client should see very few classes (~1-2 of 10)
+    n_classes_seen = [len(np.unique(ds.y[p])) for p in parts]
+    assert np.mean(n_classes_seen) <= 3.0
+
+
+def test_gamma_one_is_iid(ds):
+    parts = partition_gamma(ds, 10, gamma=1.0, seed=0)
+    n_classes_seen = [len(np.unique(ds.y[p])) for p in parts]
+    assert min(n_classes_seen) >= 8     # nearly all classes everywhere
+
+
+@given(gamma=st.floats(0.0, 1.0), n=st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_gamma_partition_property(gamma, n):
+    ds = make_dataset("gaussian", n=400, dim=4, n_classes=4, seed=1)
+    parts = partition_gamma(ds, n, gamma=gamma, seed=0)
+    assert len(parts) == n
+    assert sum(len(p) for p in parts) == len(ds)
+    assert len(np.unique(np.concatenate(parts))) == len(ds)
+
+
+def test_partition_classes_exact_ownership(ds):
+    parts = partition_classes(ds, 100, classes_per_client=2, seed=0)
+    for p in parts[:20]:
+        if len(p):
+            assert len(np.unique(ds.y[p])) <= 2
+
+
+def test_budget_law_matches_paper():
+    """p_i = (1/2)^⌊β·i/N⌋ with β=4, N=8 → pairs at 1, .5, .25, .125."""
+    p = budget_law(8, 4)
+    assert list(p) == [1.0, 1.0, 0.5, 0.5, 0.25, 0.25, 0.125, 0.125]
+
+
+def test_two_group_budget():
+    p = two_group_budget(10, r=0.3, w=4)
+    assert (p[:7] == 1.0).all() and (p[7:] == 0.25).all()
+
+
+def test_skewed_budget_modes(ds):
+    for skew in ("random", "high", "moderate"):
+        parts, p = skewed_budget_assignment(ds, 20, 2, beta=4, skew=skew)
+        assert len(parts) == 20 and len(p) == 20
+        assert set(np.round(np.log2(1 / p)).astype(int)) <= {0, 1, 2, 3}
+    # 'high': clients sharing a dominant class share a budget level
+    parts, p = skewed_budget_assignment(ds, 20, 2, beta=4, skew="high",
+                                        seed=3)
+    dom = np.array([np.bincount(ds.y[ix], minlength=10).argmax()
+                    for ix in parts])
+    for c in np.unique(dom):
+        levels = np.unique(p[dom == c])
+        assert len(levels) <= 2
+
+
+def test_build_federated_padding(ds):
+    parts = partition_gamma(ds, 5, gamma=0.3, seed=0)
+    fd = build_federated(ds, parts)
+    assert fd.n_clients == 5
+    assert int(fd.sizes.sum()) == len(ds)
+    # padded region cycles real samples (no zeros rows beyond size)
+    import jax
+    xb, yb = fd.client_batch(jax.random.PRNGKey(0), 16)
+    assert xb.shape == (5, 16, 16) and yb.shape == (5, 16)
+
+
+def test_train_test_split_disjoint(ds):
+    tr, te = train_test_split(ds, test_frac=0.25, seed=0)
+    assert len(tr) + len(te) == len(ds)
+    assert abs(len(te) - 0.25 * len(ds)) < 2
