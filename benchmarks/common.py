@@ -78,8 +78,14 @@ def two_group(r: float, w: int, gamma: float = 0.1,
 def run_cell(sc: Scenario, strategy: str, schedule: str, *, rounds: int,
              local_steps: int = SILO_K, participation: float = 1.0,
              lr: float = 0.1, batch: int = 32, seed: int = 0,
-             tau: int = 0, probe_client=None):
-    """One (method × schedule) cell. Returns (final_acc, metrics)."""
+             tau: int = 0, probe_client=None, executor: str = "scan",
+             use_fused: bool = False):
+    """One (method × schedule) cell. Returns (final_acc, metrics).
+
+    ``strategy`` is any registry name (plus the ``fedavg_full`` /
+    ``fedavg_dropout`` aliases that also pick their plan); eval-free spans
+    run through the scan executor unless ``executor="python"``.
+    """
     if strategy == "fedavg_full":
         plan = make_plan("full", np.ones_like(sc.p), rounds,
                          participation_ratio=participation, seed=seed)
@@ -97,7 +103,8 @@ def run_cell(sc: Scenario, strategy: str, schedule: str, *, rounds: int,
                     tau=tau if tau else 100)
     state, metrics = run_federated(
         sc.model, sc.fd, fed, plan, x_test=sc.x_test, y_test=sc.y_test,
-        eval_every=max(10, rounds // 4), probe_client=probe_client)
+        eval_every=max(10, rounds // 4), probe_client=probe_client,
+        executor=executor, use_fused=use_fused)
     return metrics.last("test_acc"), metrics
 
 

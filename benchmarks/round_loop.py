@@ -1,0 +1,92 @@
+"""Scan executor vs per-round Python loop — the dispatch-overhead benchmark.
+
+The classic federated driver dispatches one jitted round per plan row and
+syncs with the host every round; at the paper's model sizes the round-trip
+dominates the round's FLOPs. The scan executor stacks the (T, N) plan masks
+and runs each eval-free span as ONE ``lax.scan`` program. This benchmark
+times both on identical work and prints the speedup.
+
+    PYTHONPATH=src python benchmarks/round_loop.py [--rounds 100] [--reps 3]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FedConfig, init_fed_state
+from repro.core.rounds import make_round_fn, make_span_runner
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+
+    ds = make_dataset("teacher", n=2048, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, args.clients, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    p = budget_law(args.clients, beta=4)
+    plan = make_plan("adhoc", p, args.rounds, seed=0)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=32, lr=0.1)
+    k = jnp.full((args.clients,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+
+    round_fn = make_round_fn(model, fd, fed)
+    runner = make_span_runner(model, fd, fed)
+
+    # warmup / compile both paths
+    s0 = init_fed_state(jax.random.PRNGKey(0), model, fd.n_clients)
+    _block(round_fn(s0, sel[0], train[0], k))
+    _block(runner(s0, sel, train, k))
+
+    t_loop = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, fd.n_clients)
+        t0 = time.perf_counter()
+        for t in range(args.rounds):
+            state = round_fn(state, sel[t], train[t], k)
+        _block(state)
+        t_loop.append(time.perf_counter() - t0)
+
+    t_scan = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, fd.n_clients)
+        t0 = time.perf_counter()
+        state = runner(state, sel, train, k)
+        _block(state)
+        t_scan.append(time.perf_counter() - t0)
+
+    loop_s, scan_s = min(t_loop), min(t_scan)
+    per_round_loop = loop_s / args.rounds * 1e3
+    per_round_scan = scan_s / args.rounds * 1e3
+    print(f"rounds={args.rounds} clients={args.clients} "
+          f"K={args.local_steps} (best of {args.reps})")
+    print(f"python loop : {loop_s * 1e3:8.1f} ms total "
+          f"({per_round_loop:6.3f} ms/round)")
+    print(f"lax.scan    : {scan_s * 1e3:8.1f} ms total "
+          f"({per_round_scan:6.3f} ms/round)")
+    print(f"speedup     : {loop_s / scan_s:8.2f}x")
+    print(f"csv,round_loop,python,{loop_s * 1e6:.0f}")
+    print(f"csv,round_loop,scan,{scan_s * 1e6:.0f}")
+
+
+if __name__ == "__main__":
+    main()

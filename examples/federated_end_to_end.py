@@ -31,7 +31,8 @@ def main() -> None:
     ap.add_argument("--beta", type=int, default=4)
     ap.add_argument("--width", type=int, default=12)
     ap.add_argument("--strategies", nargs="+",
-                    default=["cc", "s1", "s2", "fedavg"])
+                    default=["cc", "cc_decay", "s1", "s2", "fedavg"],
+                    help="any names from repro.core.available_strategies()")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_fed_ckpt")
     args = ap.parse_args()
 

@@ -9,7 +9,8 @@ instead (Strategy 3) — same convergence, ~45% less client compute.
 """
 import jax.numpy as jnp
 
-from repro.core import FedConfig, run_federated, cost_report
+from repro.core import (FedConfig, available_strategies, cost_report,
+                        run_federated)
 from repro.core.schedules import make_plan
 from repro.data.federated import build_federated
 from repro.data.partition import budget_law, partition_gamma
@@ -32,7 +33,9 @@ model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
 p = budget_law(N_CLIENTS, beta=4)
 plan = make_plan("adhoc", p, ROUNDS)          # each client decides per round
 
-# 4. run CC-FedAvg (Algorithm 1)
+# 4. run CC-FedAvg (Algorithm 1). Any name from the strategy registry works
+#    here — eval-free spans execute as one jitted lax.scan program.
+print("registered strategies:", ", ".join(available_strategies()))
 fed = FedConfig(strategy="cc", local_steps=5, batch_size=32, lr=0.1)
 state, metrics = run_federated(model, fed_data, fed, plan,
                                x_test=jnp.asarray(test.x),

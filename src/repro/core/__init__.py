@@ -1,9 +1,13 @@
 """CC-FedAvg core: the paper's contribution as a composable JAX module.
 
-* :mod:`repro.core.engine`    — vectorized-client federation (Alg. 1/2/3,
-  Strategies 1/2/3, CC(c), FedNova, FedAvg full/dropout).
-* :mod:`repro.core.schedules` — round-robin / ad-hoc / sync / dropout plans.
-* :mod:`repro.core.podlevel`  — pods-as-clients CC-FedAvg for LLM-scale
+* :mod:`repro.core.strategies` — pluggable estimation-strategy registry
+  (paper §III names + extensions; register new schemes by name).
+* :mod:`repro.core.rounds`     — round executors: jitted round, scan span
+  runner, fused Pallas fast path.
+* :mod:`repro.core.engine`     — host-side driver (Alg. 1/2/3), evaluation,
+  Appendix-A cost accounting.
+* :mod:`repro.core.schedules`  — round-robin / ad-hoc / sync / dropout plans.
+* :mod:`repro.core.podlevel`   — pods-as-clients CC-FedAvg for LLM-scale
   training on the multi-pod mesh.
 """
 from repro.core.engine import (  # noqa: F401
@@ -14,5 +18,15 @@ from repro.core.engine import (  # noqa: F401
     run_federated,
     evaluate,
     cost_report,
+)
+from repro.core.rounds import (  # noqa: F401
+    make_round_body,
+    make_span_runner,
+)
+from repro.core.strategies import (  # noqa: F401
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register,
 )
 from repro.core.schedules import Plan, make_plan, fednova_local_steps  # noqa: F401

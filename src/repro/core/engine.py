@@ -3,15 +3,17 @@ baselines, with every client's state stacked along a leading axis so one
 jitted round function executes the whole federation (vmap local training,
 mask-based skip/estimate decisions, masked-mean aggregation).
 
-Strategies (paper §III):
-  * ``fedavg``  — FedAvg(full): everyone trains (plans decide selection).
-  * ``dropout`` — FedAvg under an energy quota; client leaves when spent.
-  * ``s1``      — skip rounds, server aggregates only received models.
-  * ``s2``      — skip rounds, client returns its stale local model.
-  * ``cc``      — CC-FedAvg (Strategy 3): replay Δ_{t−1}^i.
-  * ``ccc``     — CC-FedAvg(c) (Eq. 4): Strategy 3 before round τ, then s2.
-  * ``fednova`` — budget spent as fewer local iterations each round, with
-                  FedNova's normalized aggregation [32].
+The engine is three composable layers:
+
+* :mod:`repro.core.strategies` — the estimation strategies of paper §III as
+  a pluggable registry (``fedavg``/``dropout``/``s1``/``s2``/``cc``/``ccc``/
+  ``fednova`` + extensions such as ``cc_decay``); new schemes register by
+  name and never touch this file.
+* :mod:`repro.core.rounds` — round executors: one jitted round, a
+  ``lax.scan`` span runner (eval-free spans run as ONE program), and the
+  fused Pallas fast path over flat (N, P) params.
+* this module — the host-side driver (:func:`run_federated`), evaluation,
+  Fig.-2 probes and the Appendix-A cost accounting (:func:`cost_report`).
 
 Algorithm variants (Appendix A) are numerically identical by construction;
 ``variant`` ∈ {client, server, mixed} drives the storage/communication cost
@@ -19,149 +21,29 @@ accounting (:func:`cost_report`) and which side of the simulation holds Δ.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedules import Plan, fednova_local_steps
-from repro.data.federated import FederatedData
-from repro.models.simple import Classifier, xent_loss
-from repro.utils.logging import MetricLogger, log
-from repro.utils.pytree import (
-    PyTree,
-    tree_broadcast_clients,
-    tree_masked_mean,
-    tree_sub,
-    tree_add,
-    tree_zeros_like,
+from repro.core.rounds import (  # noqa: F401  (re-exported public API)
+    FedConfig,
+    _local_train,
+    init_fed_state,
+    make_round_body,
+    make_round_fn,
+    make_span_runner,
+    span_boundaries,
 )
+from repro.core.schedules import Plan, fednova_local_steps
+from repro.core.strategies import available_strategies, get_strategy
+from repro.data.federated import FederatedData
+from repro.models.simple import Classifier
+from repro.utils.logging import MetricLogger, log
+from repro.utils.pytree import PyTree, tree_add, tree_sub
 
-STRATEGIES = ("fedavg", "dropout", "s1", "s2", "cc", "ccc", "fednova")
-
-
-@dataclass(frozen=True)
-class FedConfig:
-    strategy: str = "cc"
-    variant: str = "client"        # Alg.1 client | Alg.2 server | Alg.3 mixed
-    local_steps: int = 5           # K
-    batch_size: int = 32
-    lr: float = 0.05
-    tau: int = 100                 # CC-FedAvg(c) switch round
-    seed: int = 0
-
-    def __post_init__(self):
-        if self.strategy not in STRATEGIES:
-            raise ValueError(f"unknown strategy {self.strategy!r}")
-
-
-def _mask_tree(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
-    """Leafwise select with (N,) client mask broadcast to (N, ...) leaves."""
-    def sel(x, y):
-        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
-        return jnp.where(m, x, y)
-    return jax.tree.map(sel, a, b)
-
-
-def _local_train(model: Classifier, params, key, cx, cy, size,
-                 k_steps: int, k_active, batch_size: int, lr: float):
-    """K local SGD steps on one client (Eq. 2). ``k_active`` ≤ k_steps masks
-    steps off for FedNova's reduced-iteration budget."""
-    def step(carry, k):
-        p, key = carry
-        key, sk = jax.random.split(key)
-        idx = jax.random.randint(sk, (batch_size,), 0, 2 ** 30) % size
-        g = jax.grad(lambda q: xent_loss(model, q, cx[idx], cy[idx]))(p)
-        new = jax.tree.map(lambda a, b: a - lr * b, p, g)
-        do = k < k_active
-        p = jax.tree.map(
-            lambda a, b: jnp.where(do, a, b), new, p)
-        return (p, key), None
-
-    (params, _), _ = jax.lax.scan(step, (params, key),
-                                  jnp.arange(k_steps))
-    return params
-
-
-def init_fed_state(rng, model: Classifier, n_clients: int) -> PyTree:
-    params = model.init(rng)
-    zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
-    return {
-        "params": params,
-        "deltas": zeros,                       # Δ_{t−1}^i  (Strategy 3)
-        "prev_local": tree_broadcast_clients(params, n_clients),
-        "trained_ever": jnp.zeros((n_clients,), bool),
-        "round": jnp.zeros((), jnp.int32),
-        "key": rng,
-    }
-
-
-def make_round_fn(model: Classifier, data: FederatedData, fed: FedConfig):
-    n = data.n_clients
-
-    @functools.partial(jax.jit, static_argnames=())
-    def round_fn(state, sel_mask, train_mask, k_active):
-        key, *keys = jax.random.split(state["key"], n + 1)
-        keys = jnp.stack(keys)
-        broadcast = tree_broadcast_clients(state["params"], n)
-        local = jax.vmap(
-            lambda p, k, cx, cy, sz, ka: _local_train(
-                model, p, k, cx, cy, sz, fed.local_steps, ka,
-                fed.batch_size, fed.lr)
-        )(broadcast, keys, data.x, data.y, data.sizes, k_active)
-        trained_delta = tree_sub(local, broadcast)
-
-        # ---- estimation for skipped clients --------------------------
-        stale_delta = tree_sub(state["prev_local"], broadcast)
-        stale_delta = _mask_tree(state["trained_ever"], stale_delta,
-                                 tree_zeros_like(stale_delta))
-        if fed.strategy == "cc":
-            est = state["deltas"]
-        elif fed.strategy == "ccc":
-            use_s3 = state["round"] < fed.tau
-            est = jax.tree.map(
-                lambda a, b: jnp.where(use_s3, a, b),
-                state["deltas"], stale_delta)
-        elif fed.strategy == "s2":
-            est = stale_delta
-        else:  # s1 / fedavg / dropout / fednova never aggregate estimates
-            est = tree_zeros_like(trained_delta)
-
-        delta_i = _mask_tree(train_mask, trained_delta, est)
-
-        # ---- aggregation (Eq. 3 over Δ) -------------------------------
-        if fed.strategy in ("s1", "fedavg", "dropout", "fednova"):
-            agg_mask = sel_mask & train_mask
-        else:
-            agg_mask = sel_mask
-        aggf = agg_mask.astype(jnp.float32)
-        if fed.strategy == "fednova":
-            ka = jnp.maximum(k_active.astype(jnp.float32), 1.0)
-            d_norm = jax.tree.map(
-                lambda x: x / ka.reshape((-1,) + (1,) * (x.ndim - 1)), delta_i)
-            coeff = jnp.sum(aggf * ka) / jnp.maximum(jnp.sum(aggf), 1e-9)
-            delta = jax.tree.map(
-                lambda x: coeff * x, tree_masked_mean(d_norm, aggf))
-        else:
-            delta = tree_masked_mean(delta_i, aggf)
-        new_params = tree_add(state["params"], delta)
-
-        # ---- history updates ------------------------------------------
-        upd = sel_mask & train_mask
-        deltas = _mask_tree(upd, trained_delta, state["deltas"])
-        prev_local = _mask_tree(upd, local, state["prev_local"])
-        return {
-            "params": new_params,
-            "deltas": deltas,
-            "prev_local": prev_local,
-            "trained_ever": state["trained_ever"] | upd,
-            "round": state["round"] + 1,
-            "key": key,
-        }
-
-    return round_fn
+#: registered strategy names (kept as a module constant for back-compat;
+#: the registry in :mod:`repro.core.strategies` is the source of truth)
+STRATEGIES = available_strategies()
 
 
 def make_probe_fn(model: Classifier, data: FederatedData, fed: FedConfig,
@@ -206,36 +88,69 @@ def evaluate(model: Classifier, params, x_test, y_test,
     return correct / n
 
 
-def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
-                  plan: Plan, *, x_test, y_test, eval_every: int = 10,
-                  probe_client: int | None = None,
-                  verbose: bool = False) -> tuple[PyTree, MetricLogger]:
-    """Run the whole federation per ``plan``; returns final state + metrics."""
-    rng = jax.random.PRNGKey(fed.seed)
-    state = init_fed_state(rng, model, data.n_clients)
-    round_fn = make_round_fn(model, data, fed)
-    probe_fn = (make_probe_fn(model, data, fed, probe_client)
-                if probe_client is not None else None)
+def _plan_k_active(data: FederatedData, fed: FedConfig,
+                   plan: Plan) -> jax.Array:
     if fed.strategy == "fednova":
         k_active_all = fednova_local_steps(plan.p, fed.local_steps)
     else:
         k_active_all = np.full(data.n_clients, fed.local_steps, np.int32)
-    k_active = jnp.asarray(k_active_all)
+    return jnp.asarray(k_active_all)
+
+
+def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
+                  plan: Plan, *, x_test, y_test, eval_every: int = 10,
+                  probe_client: int | None = None,
+                  verbose: bool = False, executor: str = "scan",
+                  use_fused: bool = False) -> tuple[PyTree, MetricLogger]:
+    """Run the whole federation per ``plan``; returns final state + metrics.
+
+    ``executor`` selects how eval-free spans execute: ``"scan"`` (default)
+    runs each span as one jitted ``lax.scan``; ``"python"`` is the classic
+    one-dispatch-per-round loop (the two are numerically identical — see
+    ``tests/test_rounds.py``). Per-round probing forces the python loop.
+    ``use_fused`` routes rounds through the fused Pallas kernel (only for
+    ``fused_capable`` strategies such as ``cc``).
+    """
+    if executor not in ("scan", "python"):
+        raise ValueError(f"unknown executor {executor!r}")
+    rng = jax.random.PRNGKey(fed.seed)
+    state = init_fed_state(rng, model, data.n_clients)
+    k_active = _plan_k_active(data, fed, plan)
     metrics = MetricLogger()
-    for t in range(plan.rounds):
-        sel = jnp.asarray(plan.selection[t])
-        train = jnp.asarray(plan.training[t])
-        if probe_fn is not None and t > 0:
-            pk = jax.random.fold_in(state["key"], 1234)
-            pm = probe_fn(state, pk)
-            metrics.record(t, **{k: float(v) for k, v in pm.items()})
-        state = round_fn(state, sel, train, k_active)
-        if (t + 1) % eval_every == 0 or t == plan.rounds - 1:
-            acc = evaluate(model, state["params"], x_test, y_test)
-            metrics.record(t + 1, test_acc=acc)
-            if verbose:
-                log(f"round {t + 1}/{plan.rounds}", strategy=fed.strategy,
-                    acc=f"{acc:.4f}")
+
+    if probe_client is not None or executor == "python":
+        round_fn = make_round_fn(model, data, fed, fused=use_fused)
+        probe_fn = (make_probe_fn(model, data, fed, probe_client)
+                    if probe_client is not None else None)
+        for t in range(plan.rounds):
+            sel = jnp.asarray(plan.selection[t])
+            train = jnp.asarray(plan.training[t])
+            if probe_fn is not None and t > 0:
+                pk = jax.random.fold_in(state["key"], 1234)
+                pm = probe_fn(state, pk)
+                metrics.record(t, **{k: float(v) for k, v in pm.items()})
+            state = round_fn(state, sel, train, k_active)
+            if (t + 1) % eval_every == 0 or t == plan.rounds - 1:
+                acc = evaluate(model, state["params"], x_test, y_test)
+                metrics.record(t + 1, test_acc=acc)
+                if verbose:
+                    log(f"round {t + 1}/{plan.rounds}",
+                        strategy=fed.strategy, acc=f"{acc:.4f}")
+        return state, metrics
+
+    run_span = make_span_runner(model, data, fed, fused=use_fused)
+    sel_all = jnp.asarray(plan.selection)
+    train_all = jnp.asarray(plan.training)
+    start = 0
+    for stop in span_boundaries(plan.rounds, eval_every):
+        state = run_span(state, sel_all[start:stop], train_all[start:stop],
+                         k_active)
+        acc = evaluate(model, state["params"], x_test, y_test)
+        metrics.record(stop, test_acc=acc)
+        if verbose:
+            log(f"round {stop}/{plan.rounds}", strategy=fed.strategy,
+                acc=f"{acc:.4f}")
+        start = stop
     return state, metrics
 
 

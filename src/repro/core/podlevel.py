@@ -30,6 +30,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.strategies import get_strategy
 from repro.models import decoder
 from repro.models.config import ArchConfig
 from repro.utils.pytree import PyTree, tree_broadcast_clients, tree_zeros_like
@@ -49,14 +50,20 @@ def init_pod_fed_state(rng, cfg: ArchConfig, n_clients: int,
 
 
 def make_cc_pod_round(cfg: ArchConfig, *, lr: float, local_steps: int,
-                      n_clients: int) -> Callable:
+                      n_clients: int, strategy: str = "cc") -> Callable:
     """Build the jittable federated round for LLM-scale clients.
 
     batches: pytree with leaves (clients, K, per_client_batch, S, ...).
     train_mask: (clients,) float — 1 for pods that train this round
     (ad-hoc/round-robin schedules decide it, exactly as in the small-scale
     engine).
+    ``strategy`` resolves through the registry; the pod engine keeps only
+    stored Δ (no stale-model history), so replay-style strategies
+    (``cc``, ``cc_decay``, …) are supported — others raise at build time.
     """
+    strat = get_strategy(strategy)
+    # fail fast if the strategy can't estimate from stored Δ alone
+    strat.pod_estimate(tree_zeros_like({"probe": jnp.zeros((1,))}))
 
     def local_train(params, client_batches):
         """K plain SGD steps (Eq. 2) from the broadcast global model."""
@@ -86,7 +93,8 @@ def make_cc_pod_round(cfg: ArchConfig, *, lr: float, local_steps: int,
             mm = m.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype)
             return t * mm + s * (1 - mm)
 
-        delta_i = jax.tree.map(mix, trained_delta, fed_state["deltas"])
+        est = strat.pod_estimate(fed_state["deltas"])
+        delta_i = jax.tree.map(mix, trained_delta, est)
         # aggregation = mean over the client axis → cross-pod all-reduce
         delta = jax.tree.map(lambda d: jnp.mean(d.astype(jnp.float32),
                                                 axis=0), delta_i)

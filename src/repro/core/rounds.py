@@ -1,0 +1,230 @@
+"""Round executors for the vectorized-client federation.
+
+Three ways to run the same round semantics, all built from one traceable
+round body so they are numerically interchangeable:
+
+* :func:`make_round_fn` — one jitted round (the classic per-round API);
+* :func:`make_span_runner` — ``jax.lax.scan`` over a stacked (C, N) chunk
+  of plan masks, so an eval-free span of C rounds executes as ONE jitted
+  program instead of C separate dispatches (the dominant cost at small
+  model sizes is host→device round-trips, not FLOPs — see
+  ``benchmarks/round_loop.py``);
+* ``fused=True`` — route the train-or-estimate + masked-mean + global
+  update through the single-HBM-pass Pallas kernel
+  (:func:`repro.kernels.ops.cc_delta_update`) on flat (N, P) parameters;
+  interpret mode on CPU, Mosaic on TPU. Only strategies whose estimate is
+  a verbatim Δ replay (``fused_capable``) qualify.
+
+Strategy semantics themselves live in :mod:`repro.core.strategies`; this
+module never branches on a strategy name.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import (RoundCtx, Strategy, get_strategy,
+                                   masked_select)
+from repro.data.federated import FederatedData
+from repro.models.simple import Classifier, xent_loss
+from repro.utils.pytree import (
+    PyTree,
+    tree_add,
+    tree_broadcast_clients,
+    tree_ravel,
+    tree_ravel_clients,
+    tree_sub,
+    tree_zeros_like,
+)
+
+_FUSED_PAD = 512               # flat params padded to a tile-friendly multiple
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    strategy: str = "cc"
+    variant: str = "client"        # Alg.1 client | Alg.2 server | Alg.3 mixed
+    local_steps: int = 5           # K
+    batch_size: int = 32
+    lr: float = 0.05
+    tau: int = 100                 # CC-FedAvg(c) switch round
+    seed: int = 0
+
+    def __post_init__(self):
+        get_strategy(self.strategy)    # raises ValueError on unknown names
+
+    def resolve(self) -> Strategy:
+        return get_strategy(self.strategy)
+
+
+def _local_train(model: Classifier, params, key, cx, cy, size,
+                 k_steps: int, k_active, batch_size: int, lr: float):
+    """K local SGD steps on one client (Eq. 2). ``k_active`` ≤ k_steps masks
+    steps off for FedNova's reduced-iteration budget."""
+    def step(carry, k):
+        p, key = carry
+        key, sk = jax.random.split(key)
+        idx = jax.random.randint(sk, (batch_size,), 0, 2 ** 30) % size
+        g = jax.grad(lambda q: xent_loss(model, q, cx[idx], cy[idx]))(p)
+        new = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        do = k < k_active
+        p = jax.tree.map(
+            lambda a, b: jnp.where(do, a, b), new, p)
+        return (p, key), None
+
+    (params, _), _ = jax.lax.scan(step, (params, key),
+                                  jnp.arange(k_steps))
+    return params
+
+
+def init_fed_state(rng, model: Classifier, n_clients: int) -> PyTree:
+    params = model.init(rng)
+    zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
+    return {
+        "params": params,
+        "deltas": zeros,                       # Δ_{t−1}^i  (Strategy 3)
+        "prev_local": tree_broadcast_clients(params, n_clients),
+        "trained_ever": jnp.zeros((n_clients,), bool),
+        "round": jnp.zeros((), jnp.int32),
+        "key": rng,
+    }
+
+
+def _train_all_clients(model: Classifier, data: FederatedData,
+                       fed: FedConfig, state: PyTree, k_active):
+    """Split the round key and vmap local training over every client."""
+    n = data.n_clients
+    key, *keys = jax.random.split(state["key"], n + 1)
+    keys = jnp.stack(keys)
+    broadcast = tree_broadcast_clients(state["params"], n)
+    local = jax.vmap(
+        lambda p, k, cx, cy, sz, ka: _local_train(
+            model, p, k, cx, cy, sz, fed.local_steps, ka,
+            fed.batch_size, fed.lr)
+    )(broadcast, keys, data.x, data.y, data.sizes, k_active)
+    return key, broadcast, local
+
+
+def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
+                    *, fused: bool = False):
+    """The traceable single-round transition ``(state, sel, train, k) →
+    state`` that every executor (jit, scan, fused) wraps."""
+    strategy = fed.resolve()
+    if fused:
+        return _make_fused_round_body(model, data, fed, strategy)
+
+    def round_body(state, sel_mask, train_mask, k_active):
+        key, broadcast, local = _train_all_clients(model, data, fed,
+                                                   state, k_active)
+        trained_delta = tree_sub(local, broadcast)
+
+        # ---- estimation for skipped clients --------------------------
+        stale_delta = tree_sub(state["prev_local"], broadcast)
+        stale_delta = masked_select(state["trained_ever"], stale_delta,
+                                    tree_zeros_like(stale_delta))
+        ctx = RoundCtx(sel_mask=sel_mask, train_mask=train_mask,
+                       k_active=k_active, round=state["round"], tau=fed.tau,
+                       stale_delta=stale_delta, trained_delta=trained_delta)
+        est = strategy.estimate(state, ctx)
+        delta_i = masked_select(train_mask, trained_delta, est)
+
+        # ---- aggregation (Eq. 3 over Δ) -------------------------------
+        aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+        delta = strategy.aggregate(delta_i, aggf, ctx)
+        new_params = tree_add(state["params"], delta)
+
+        # ---- history updates ------------------------------------------
+        upd = sel_mask & train_mask
+        deltas, prev_local = strategy.update_history(
+            state, ctx, trained_delta, local, est)
+        return {
+            "params": new_params,
+            "deltas": deltas,
+            "prev_local": prev_local,
+            "trained_ever": state["trained_ever"] | upd,
+            "round": state["round"] + 1,
+            "key": key,
+        }
+
+    return round_body
+
+
+def _make_fused_round_body(model: Classifier, data: FederatedData,
+                           fed: FedConfig, strategy: Strategy):
+    """Route the round through the fused Pallas kernel: one HBM pass
+    computes Δ_t^i = train ? (x_K^i − x_t) : Δ_{t−1}^i, the masked mean and
+    the global update over flat (N, P) parameters."""
+    from repro.kernels import ops
+
+    if not strategy.fused_capable:
+        raise ValueError(
+            f"strategy {strategy.name!r} is not fused-capable (the kernel "
+            "replays stored Δ verbatim); use the tree-ops path")
+
+    def round_body(state, sel_mask, train_mask, k_active):
+        key, _, local = _train_all_clients(model, data, fed, state, k_active)
+        flat_local, unravel_clients = tree_ravel_clients(local)
+        flat_deltas, _ = tree_ravel_clients(state["deltas"])
+        flat_global, unravel = tree_ravel(state["params"])
+        p = flat_global.shape[0]
+        pad = (-p) % _FUSED_PAD
+        if pad:                     # zero-pad: padded lanes stay exactly 0
+            flat_local = jnp.pad(flat_local, ((0, 0), (0, pad)))
+            flat_deltas = jnp.pad(flat_deltas, ((0, 0), (0, pad)))
+            flat_global = jnp.pad(flat_global, (0, pad))
+        # history semantics: stored Δ only advances for sel∧train clients,
+        # so that (not bare train_mask) is the kernel's train input
+        upd = sel_mask & train_mask
+        new_deltas, new_global = ops.cc_delta_update(
+            flat_local, flat_deltas, flat_global,
+            upd.astype(jnp.float32), sel_mask.astype(jnp.float32),
+            block=min(65536, p + pad))
+        prev_local = masked_select(upd, local, state["prev_local"])
+        return {
+            "params": unravel(new_global[:p]),
+            "deltas": unravel_clients(new_deltas[:, :p]),
+            "prev_local": prev_local,
+            "trained_ever": state["trained_ever"] | upd,
+            "round": state["round"] + 1,
+            "key": key,
+        }
+
+    return round_body
+
+
+def make_round_fn(model: Classifier, data: FederatedData, fed: FedConfig,
+                  *, fused: bool = False):
+    """One jitted round: ``round_fn(state, sel_mask, train_mask, k_active)``."""
+    return jax.jit(make_round_body(model, data, fed, fused=fused))
+
+
+def make_span_runner(model: Classifier, data: FederatedData, fed: FedConfig,
+                     *, fused: bool = False):
+    """Scan executor: ``run_span(state, sel_chunk, train_chunk, k_active)``
+    advances the federation over a (C, N) chunk of plan masks as one jitted
+    ``lax.scan`` — no host sync until the span ends. Recompiles once per
+    distinct chunk length C (eval cadence makes C constant in practice)."""
+    round_body = make_round_body(model, data, fed, fused=fused)
+
+    @jax.jit
+    def run_span(state, sel_chunk, train_chunk, k_active):
+        def step(st, masks):
+            sel, train = masks
+            return round_body(st, sel, train, k_active), None
+
+        state, _ = jax.lax.scan(step, state, (sel_chunk, train_chunk))
+        return state
+
+    return run_span
+
+
+def span_boundaries(rounds: int, eval_every: int) -> list[int]:
+    """Eval checkpoints of the classic loop: every ``eval_every`` rounds
+    plus the final round — spans run scan-fused between them."""
+    stops = list(range(eval_every, rounds + 1, max(1, eval_every)))
+    if not stops or stops[-1] != rounds:
+        stops.append(rounds)
+    return stops

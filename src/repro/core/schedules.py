@@ -61,13 +61,26 @@ def _w_of(p: np.ndarray) -> np.ndarray:
 
 def make_plan(kind: str, p: np.ndarray, t_rounds: int,
               participation_ratio: float = 1.0, seed: int = 0) -> Plan:
+    p = np.asarray(p, float)
+    if p.ndim != 1 or len(p) == 0:
+        raise ValueError(f"p must be a non-empty 1-D budget vector, got "
+                         f"shape {p.shape}")
+    if not ((p > 0) & (p <= 1)).all():     # also rejects NaN
+        raise ValueError("budgets must satisfy 0 < p_i <= 1")
+    if t_rounds < 1:
+        raise ValueError(f"t_rounds must be >= 1, got {t_rounds}")
     rng = np.random.default_rng(seed)
     n = len(p)
     sel = server_selection(rng, t_rounds, n, participation_ratio)
     w = _w_of(p)
     if kind == "round_robin":
         # client i trains on selected rounds counted mod W_i (so a client
-        # selected less often still meets its 1-in-W budget in expectation)
+        # selected less often still meets its 1-in-W budget in expectation).
+        # offsets must stay in the half-open [0, W_i) — an offset == W_i
+        # could never fire through ``counters % w`` — which is what
+        # ``Generator.integers``' exclusive high end gives; p_i = 1 clients
+        # then always get offset 0, i.e. train whenever selected
+        # (regression-tested in test_fed_engine.py).
         train = np.zeros((t_rounds, n), bool)
         offsets = rng.integers(0, w)
         counters = np.zeros(n, int)

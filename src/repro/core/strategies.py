@@ -1,0 +1,263 @@
+"""Pluggable local-model estimation strategies (paper §III + extensions).
+
+Each strategy is a small frozen dataclass with four hooks the round
+executor (:mod:`repro.core.rounds`) calls in order:
+
+* ``estimate(state, ctx)``        — Δ̂_t^i for clients that skip training,
+* ``agg_mask(ctx)``               — which clients enter the aggregation,
+* ``aggregate(delta_i, aggf, ctx)`` — Eq. 3 (masked mean by default;
+  FedNova normalizes by local-step counts),
+* ``update_history(state, ctx, trained_delta, local, est)`` — how the
+  per-client Δ / stale-model history rolls forward.
+
+Strategies register by name via :func:`register`; ``FedConfig.strategy``
+resolves through :func:`get_strategy`, so adding a new budget-adaptation
+scheme (the surveys arXiv:2307.09182 / arXiv:2002.10610 catalogue dozens)
+is a ~30-line estimator class here — the engine never changes.
+
+Paper §III ↔ registry names:
+
+    ==============================  ==========
+    paper                           registry
+    ==============================  ==========
+    FedAvg (full participation)     ``fedavg``
+    FedAvg (dropout baseline)       ``dropout``
+    Strategy 1 (server skips)       ``s1``
+    Strategy 2 (stale local model)  ``s2``
+    Strategy 3 / CC-FedAvg          ``cc``
+    CC-FedAvg(c), Eq. 4             ``ccc``
+    FedNova baseline [32]           ``fednova``
+    decayed-Δ replay (extension)    ``cc_decay``
+    ==============================  ==========
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree, tree_masked_mean, tree_zeros_like
+
+
+def masked_select(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
+    """Leafwise select with an (N,) client mask broadcast to (N, ...) leaves."""
+    def sel(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+@dataclass(frozen=True)
+class RoundCtx:
+    """Everything a strategy may condition on inside one round.
+
+    All array members are traced values (safe under jit/scan); scalars that
+    must stay static (``tau``) are Python ints baked at trace time.
+    """
+    sel_mask: jax.Array      # (N,) bool — server selection S_t
+    train_mask: jax.Array    # (N,) bool — performs real local training
+    k_active: jax.Array      # (N,) int32 — local steps actually run
+    round: jax.Array         # () int32 — current round t
+    tau: int                 # CC-FedAvg(c) switch round
+    stale_delta: PyTree      # x_{t-1,K}^i − x_t re-expressed as a delta
+    trained_delta: PyTree    # x_K^i − x_t from this round's local training
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """Base strategy: train-only aggregation, standard history roll."""
+
+    #: registry key; subclasses set it via their ``name`` field default
+    name: str = ""
+    #: the fused Pallas round kernel implements exactly this strategy's
+    #: estimate (verbatim Δ replay) — only those may take the fast path
+    fused_capable: bool = False
+
+    # ---- hooks ----------------------------------------------------------
+
+    def estimate(self, state: PyTree, ctx: RoundCtx) -> PyTree:
+        """Δ̂_t^i for skipping clients. Default: contribute nothing (the
+        agg_mask below drops skippers anyway)."""
+        return tree_zeros_like(ctx.trained_delta)
+
+    def agg_mask(self, ctx: RoundCtx) -> jax.Array:
+        """Which clients the server averages. Default: only real trainers
+        (Strategy 1 / FedAvg-family semantics)."""
+        return ctx.sel_mask & ctx.train_mask
+
+    def aggregate(self, delta_i: PyTree, aggf: jax.Array,
+                  ctx: RoundCtx) -> PyTree:
+        """Eq. 3: unweighted masked mean over the client axis."""
+        return tree_masked_mean(delta_i, aggf)
+
+    def update_history(self, state: PyTree, ctx: RoundCtx,
+                       trained_delta: PyTree, local: PyTree,
+                       est: PyTree) -> tuple[PyTree, PyTree]:
+        """Roll (deltas, prev_local) forward; overwrite only clients that
+        actually trained this round (Alg. 1 lines 20-21)."""
+        upd = ctx.sel_mask & ctx.train_mask
+        deltas = masked_select(upd, trained_delta, state["deltas"])
+        prev_local = masked_select(upd, local, state["prev_local"])
+        return deltas, prev_local
+
+    def pod_estimate(self, deltas: PyTree) -> PyTree:
+        """Estimate from stored Δ only — the pod-level (LLM-scale) engine
+        keeps no stale-model history, so only replay-style strategies
+        support it."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no pod-level estimate "
+            "(needs per-client history beyond stored deltas)")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Strategy] = {}
+
+
+def register(strategy: Strategy) -> Strategy:
+    """Register a strategy instance under its ``name`` (last wins)."""
+    if not strategy.name:
+        raise ValueError("strategy must have a non-empty name")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: "
+            f"{', '.join(available_strategies())}") from None
+
+
+def available_strategies() -> tuple[str, ...]:
+    """Registered names in registration order (paper order first)."""
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# paper §III strategies
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FedAvg(Strategy):
+    """FedAvg(full): everyone the plan says trains, trains; skippers are
+    simply absent from the round (plans decide selection)."""
+    name: str = "fedavg"
+
+
+@dataclass(frozen=True)
+class FedAvgDropout(Strategy):
+    """FedAvg under an energy quota — the *plan* removes a client once its
+    budget is spent; round semantics are plain FedAvg."""
+    name: str = "dropout"
+
+
+@dataclass(frozen=True)
+class SkipRounds(Strategy):
+    """Strategy 1: skipping clients upload nothing; the server averages
+    only received models."""
+    name: str = "s1"
+
+
+@dataclass(frozen=True)
+class StaleModel(Strategy):
+    """Strategy 2: a skipping client returns its stale local model
+    x_{t-1,K}^i, i.e. contributes x_{t-1,K}^i − x_t as its delta."""
+    name: str = "s2"
+
+    def estimate(self, state, ctx):
+        return ctx.stale_delta
+
+    def agg_mask(self, ctx):
+        return ctx.sel_mask
+
+
+@dataclass(frozen=True)
+class CCFedAvg(Strategy):
+    """Strategy 3 / CC-FedAvg: replay the stored Δ_{t−1}^i verbatim
+    (Alg. 1 line 15). This is exactly what the fused Pallas kernel
+    (:mod:`repro.kernels.cc_delta_update`) computes in one HBM pass."""
+    name: str = "cc"
+    fused_capable: bool = True
+
+    def estimate(self, state, ctx):
+        return state["deltas"]
+
+    def agg_mask(self, ctx):
+        return ctx.sel_mask
+
+    def pod_estimate(self, deltas):
+        return deltas
+
+
+@dataclass(frozen=True)
+class CCFedAvgC(Strategy):
+    """CC-FedAvg(c), Eq. 4: Strategy 3 before round τ, Strategy 2 after."""
+    name: str = "ccc"
+
+    def estimate(self, state, ctx):
+        use_s3 = ctx.round < ctx.tau
+        return jax.tree.map(lambda a, b: jnp.where(use_s3, a, b),
+                            state["deltas"], ctx.stale_delta)
+
+    def agg_mask(self, ctx):
+        return ctx.sel_mask
+
+
+@dataclass(frozen=True)
+class FedNova(Strategy):
+    """FedNova [32]: the budget is spent as fewer local iterations every
+    round; aggregation normalizes each Δ by its step count, then rescales
+    by the mean step count so uniform budgets reduce to FedAvg exactly."""
+    name: str = "fednova"
+
+    def aggregate(self, delta_i, aggf, ctx):
+        ka = jnp.maximum(ctx.k_active.astype(jnp.float32), 1.0)
+        d_norm = jax.tree.map(
+            lambda x: x / ka.reshape((-1,) + (1,) * (x.ndim - 1)), delta_i)
+        coeff = jnp.sum(aggf * ka) / jnp.maximum(jnp.sum(aggf), 1e-9)
+        return jax.tree.map(lambda x: coeff * x,
+                            tree_masked_mean(d_norm, aggf))
+
+
+# ---------------------------------------------------------------------------
+# extensions beyond the paper
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CCDecay(Strategy):
+    """Decayed-Δ replay: a skipping client contributes γ·Δ_{t−1}^i and
+    stores the decayed value, so consecutive skips contribute γ, γ², …
+    times the last real update — the replayed momentum fades instead of
+    being trusted forever (CC-FedAvg is the γ=1 limit)."""
+    name: str = "cc_decay"
+    gamma: float = 0.9
+
+    def estimate(self, state, ctx):
+        return jax.tree.map(lambda d: self.gamma * d, state["deltas"])
+
+    def agg_mask(self, ctx):
+        return ctx.sel_mask
+
+    def update_history(self, state, ctx, trained_delta, local, est):
+        upd = ctx.sel_mask & ctx.train_mask
+        skipped = ctx.sel_mask & ~ctx.train_mask
+        deltas = masked_select(upd, trained_delta,
+                               masked_select(skipped, est, state["deltas"]))
+        prev_local = masked_select(upd, local, state["prev_local"])
+        return deltas, prev_local
+
+    def pod_estimate(self, deltas):
+        return jax.tree.map(lambda d: self.gamma * d, deltas)
+
+
+for _s in (FedAvg(), FedAvgDropout(), SkipRounds(), StaleModel(),
+           CCFedAvg(), CCFedAvgC(), FedNova(), CCDecay()):
+    register(_s)

@@ -123,8 +123,14 @@ def parse_module(text: str) -> dict[str, Computation]:
 
 def _operand_names(rest: str) -> list[str]:
     """Names in the operand list. ``rest`` starts *inside* the instruction's
-    opening paren (the instr regex consumed it), so depth starts at 1."""
-    depth, out, token = 1, [], ""
+    opening paren (the instr regex consumed it), so depth starts at 1.
+
+    Handles both operand print styles: bare names (``dot(%a, %b)``) and
+    typed operands (``dot(f32[64,128]{1,0} %a, ...)``) — commas inside
+    ``[]``/``{}`` shape/layout annotations are not separators, and the
+    operand name is the last whitespace token of each part.
+    """
+    depth, token = 1, ""
     for ch in rest:
         if ch == "(":
             depth += 1
@@ -136,9 +142,24 @@ def _operand_names(rest: str) -> list[str]:
             continue
         if depth >= 1:
             token += ch
-    for part in token.split(","):
-        part = part.strip()
-        mm = re.match(r"%?([\w.\-]+)$", part)
+    parts, buf, braces = [], "", 0
+    for ch in token:
+        if ch in "[{":
+            braces += 1
+        elif ch in "]}":
+            braces -= 1
+        if ch == "," and braces == 0:
+            parts.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    parts.append(buf)
+    out = []
+    for part in parts:
+        words = part.strip().split()
+        if not words:
+            continue
+        mm = re.match(r"%?([\w.\-]+)$", words[-1])
         if mm:
             out.append(mm.group(1))
     return out

@@ -111,6 +111,52 @@ def tree_masked_mean(tree: PyTree, mask: jax.Array, axis: int = 0,
     return jax.tree.map(_mean, tree)
 
 
+def tree_ravel(tree: PyTree) -> tuple[jax.Array, Callable[[jax.Array], PyTree]]:
+    """Flatten a pytree to one 1-D vector; returns (flat, unravel_fn).
+
+    The flat layout (leaf traversal order) matches :func:`tree_ravel_clients`
+    so per-client (N, P) stacks and the (P,) global vector line up — the
+    contract the fused Pallas round kernel relies on.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([jnp.ravel(l) for l in leaves]) if leaves \
+        else jnp.zeros((0,))
+
+    def unravel(vec: jax.Array) -> PyTree:
+        out, off = [], 0
+        for l in leaves:
+            size = int(np.prod(l.shape)) if l.ndim else 1
+            out.append(vec[off: off + size].reshape(l.shape).astype(l.dtype))
+            off += size
+        return treedef.unflatten(out)
+
+    return flat, unravel
+
+
+def tree_ravel_clients(tree: PyTree) -> tuple[jax.Array,
+                                              Callable[[jax.Array], PyTree]]:
+    """Flatten a client-stacked pytree ((N, ...) leaves) to an (N, P) matrix.
+
+    Returns (flat, unravel_fn); ``unravel_fn`` accepts any (M, P) matrix and
+    rebuilds the tree with leading axis M (dtypes restored per leaf).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+
+    def unravel(mat: jax.Array) -> PyTree:
+        out, off = [], 0
+        for l in leaves:
+            size = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+            out.append(mat[:, off: off + size]
+                       .reshape((mat.shape[0],) + l.shape[1:])
+                       .astype(l.dtype))
+            off += size
+        return treedef.unflatten(out)
+
+    return flat, unravel
+
+
 def tree_count_params(tree: PyTree) -> int:
     return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
 

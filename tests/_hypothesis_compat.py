@@ -1,0 +1,195 @@
+"""Dependency-free fallback for ``hypothesis``.
+
+The tier-1 suite uses hypothesis property tests, but the container does not
+ship the package (and nothing may be pip-installed). Importing this module
+(done in ``conftest.py``) installs a minimal stand-in into ``sys.modules``
+*only when the real package is missing*: ``@given`` then replays each test
+over a deterministic sample set (strategy bounds first, then seeded random
+draws) instead of hypothesis' adaptive search. When hypothesis IS
+installed, this module is a no-op and the real engine runs.
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``floats``, ``booleans``, ``sampled_from`` and ``lists`` — extend here if a
+test needs more.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+N_RANDOM_EXAMPLES = 8          # per test, on top of the bounds examples
+
+
+class _Strategy:
+    """A sampleable value source: fixed edge examples + random draws."""
+
+    def __init__(self, sampler, edges=()):
+        self._sampler = sampler
+        self._edges = tuple(edges)
+
+    def edges(self):
+        return self._edges
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sampler(rng)),
+                         tuple(fn(e) for e in self._edges))
+
+
+def _integers(min_value=0, max_value=100):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     edges=(min_value, max_value))
+
+
+def _floats(min_value=0.0, max_value=1.0, allow_nan=False,
+            allow_infinity=False, width=64):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     edges=(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5, edges=(False, True))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements),
+                     edges=tuple(elements[:2]))
+
+
+def _lists(elements: _Strategy, min_size=0, max_size=10, unique=False):
+    def sample(rng):
+        size = rng.randint(min_size, max_size)
+        out = []
+        seen = set()
+        attempts = 0
+        while len(out) < size:
+            attempts += 1
+            if attempts > 100 * max(1, size):
+                raise ValueError(
+                    "could not draw a unique list: element domain smaller "
+                    f"than requested size {size}")
+            v = elements.sample(rng)
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+    edges = tuple([e] * max(1, min_size) for e in elements.edges()
+                  if min_size <= max(1, min_size) <= max_size)
+    return _Strategy(sample, edges=edges)
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value, edges=(value,))
+
+
+def _given(*arg_strategies, **kw_strategies):
+    """Replay the test over bounds examples + seeded random draws.
+
+    Mirrors hypothesis' argument mapping: keyword strategies bind by name,
+    positional strategies fill the test's *rightmost* remaining parameters;
+    anything left over stays in the signature for pytest fixtures.
+    """
+
+    def deco(fn):
+        import inspect
+
+        inner = getattr(fn, "_compat_inner", fn)
+        params = list(inspect.signature(inner).parameters.values())
+        names = [p.name for p in params]
+        remaining = [n for n in names if n not in kw_strategies]
+        pos_names = remaining[len(remaining) - len(arg_strategies):] \
+            if arg_strategies else []
+        fixture_params = [p for p in params
+                          if p.name not in kw_strategies
+                          and p.name not in pos_names]
+        strategy_map = dict(zip(pos_names, arg_strategies))
+        strategy_map.update(kw_strategies)
+
+        @functools.wraps(inner)
+        def wrapper(**fixture_kwargs):
+            # honor @settings(max_examples=...) as an upper bound on total
+            # runs (read at call time so decorator order doesn't matter)
+            budget = getattr(wrapper, "_compat_max_examples", None) \
+                or getattr(fn, "_compat_max_examples", None)
+            rng = random.Random(0)
+            keys = list(strategy_map)
+            strategies = [strategy_map[k] for k in keys]
+            runs = []
+            # all-min / all-max style edge combinations (zip, not product,
+            # to keep the run count linear in the edge count)
+            n_edges = max((len(s.edges()) for s in strategies), default=0)
+            for i in range(n_edges):
+                runs.append([
+                    s.edges()[min(i, len(s.edges()) - 1)]
+                    if s.edges() else s.sample(rng)
+                    for s in strategies])
+            for _ in range(N_RANDOM_EXAMPLES):
+                runs.append([s.sample(rng) for s in strategies])
+            if budget:
+                runs = runs[:max(1, budget)]
+            for values in runs:
+                inner(**fixture_kwargs, **dict(zip(keys, values)))
+
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+
+    return deco
+
+
+def _settings(max_examples=None, deadline=None, **_ignored):
+    """Record the example budget; ``given`` caps its run count with it
+    (read at call time, so decorator order doesn't matter)."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        fn._compat_inner = getattr(fn, "_compat_inner", fn)
+        return fn
+
+    return deco
+
+
+def _assume(condition) -> bool:
+    if not condition:
+        import pytest
+        pytest.skip("assumption not satisfied (hypothesis shim)")
+    return True
+
+
+def install() -> bool:
+    """Install the shim iff hypothesis is unavailable. Returns True when
+    the shim is active."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.assume = _assume
+    mod.example = lambda *a, **k: (lambda fn: fn)
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.booleans = _booleans
+    st.sampled_from = _sampled_from
+    st.lists = _lists
+    st.tuples = _tuples
+    st.just = _just
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

@@ -1,6 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
 (only launch/dryrun.py forces 512 placeholder devices, in its own process).
 """
+import _hypothesis_compat
+
+# when the real hypothesis package is absent, install the deterministic
+# replay shim BEFORE test modules import `from hypothesis import ...`
+_hypothesis_compat.install()
+
 import jax
 import numpy as np
 import pytest

@@ -222,6 +222,75 @@ def test_plan_compute_fraction():
     assert 0.7 <= frac <= 0.8          # (1 + 0.5)/2
 
 
+ALL_KINDS = ("round_robin", "adhoc", "sync", "dropout", "full")
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_plan_invariants_all_kinds(kind, seed):
+    """Every schedule kind: training ⊆ selection, shapes match, and
+    compute_fraction stays within [0, 1]."""
+    p = np.array([1.0, 0.5, 0.25, 0.125, 1.0])
+    plan = make_plan(kind, p, 40, seed=seed)
+    assert plan.selection.shape == plan.training.shape == (40, 5)
+    assert not (plan.training & ~plan.selection).any()
+    assert 0.0 <= plan.compute_fraction() <= 1.0
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("seed", range(8))
+def test_full_budget_clients_always_train_when_selected(kind, seed):
+    """Regression for the round-robin offsets draw: p_i = 1 ⇒ W_i = 1 ⇒ the
+    only reachable offset is 0, so a full-budget client must train on EVERY
+    selected round under every schedule kind (an inclusive-endpoint offset
+    draw would break this)."""
+    p = np.array([1.0, 0.25, 1.0])
+    plan = make_plan(kind, p, 60, participation_ratio=0.67, seed=seed)
+    for i in (0, 2):
+        np.testing.assert_array_equal(plan.training[:, i],
+                                      plan.selection[:, i])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_round_robin_every_client_eventually_trains(seed):
+    """With full selection, any client whose window W_i fits in the horizon
+    trains at least once (offsets live in [0, W_i), never beyond)."""
+    p = np.array([1.0, 0.5, 0.25, 0.2])
+    t = 8   # >= max W_i = 5
+    plan = make_plan("round_robin", p, t, seed=seed)
+    assert (plan.training.sum(axis=0) >= 1).all()
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_plan_compute_fraction_tracks_budget(kind):
+    """compute_fraction bounds per schedule semantics: ≈ mean budget for the
+    budget-tracking kinds, exactly 1 when training == selection (full;
+    dropout after quota-exhausted clients leave selection too), and ≤ mean
+    budget for sync (everyone throttled to the slowest window)."""
+    p = np.array([1.0, 0.5, 0.5, 0.25])
+    plan = make_plan(kind, p, 400, seed=3)
+    frac = plan.compute_fraction()
+    if kind in ("full", "dropout"):
+        assert frac == 1.0
+    elif kind == "sync":
+        assert 0.0 < frac <= p.mean() + 1e-9
+    else:
+        assert abs(frac - p.mean()) < 0.12
+
+
+def test_make_plan_validates_inputs():
+    with pytest.raises(ValueError):
+        make_plan("round_robin", np.array([0.0, 0.5]), 10)
+    with pytest.raises(ValueError):
+        make_plan("round_robin", np.array([np.nan, 0.5]), 10)
+    with pytest.raises(ValueError):
+        make_plan("round_robin", np.array([1.5]), 10)
+    with pytest.raises(ValueError):
+        make_plan("round_robin", np.array([0.5]), 0)
+    with pytest.raises(ValueError):
+        make_plan("no_such_kind", np.array([0.5]), 10)
+
+
 # ---------------------------------------------------------------------------
 # Appendix-A variants: storage/communication accounting
 # ---------------------------------------------------------------------------

@@ -1,0 +1,179 @@
+"""Strategy registry: dispatch, round-trip, cc_decay semantics, and the
+Appendix-A cost-report variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (FedConfig, STRATEGIES, cost_report,
+                               init_fed_state, make_round_fn)
+from repro.core.schedules import make_plan
+from repro.core.strategies import (CCDecay, Strategy, available_strategies,
+                                   get_strategy, register)
+from repro.data.federated import build_federated
+from repro.data.partition import partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, N, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    return model, fd
+
+
+# ---------------------------------------------------------------------------
+# registry dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("definitely_not_registered")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        FedConfig(strategy="definitely_not_registered")
+
+
+def test_all_registered_names_round_trip():
+    names = available_strategies()
+    assert len(names) >= 8            # paper's seven + cc_decay
+    for name in names:
+        s = get_strategy(name)
+        assert s.name == name
+        # every registered name must build a valid config
+        assert FedConfig(strategy=name).strategy == name
+
+
+def test_paper_names_present():
+    for name in ("fedavg", "dropout", "s1", "s2", "cc", "ccc", "fednova",
+                 "cc_decay"):
+        assert name in available_strategies()
+    # back-compat module constant mirrors the registry
+    assert set(STRATEGIES) == set(available_strategies())
+
+
+def test_register_requires_name_and_allows_plugins():
+    with pytest.raises(ValueError):
+        register(Strategy(name=""))
+    probe = CCDecay(name="_test_probe_gamma_half", gamma=0.5)
+    try:
+        register(probe)
+        assert get_strategy("_test_probe_gamma_half") is probe
+        assert FedConfig(strategy="_test_probe_gamma_half").resolve() is probe
+    finally:
+        from repro.core import strategies as S
+        S._REGISTRY.pop("_test_probe_gamma_half", None)
+
+
+def test_fused_capability_flags():
+    assert get_strategy("cc").fused_capable
+    for name in ("s1", "s2", "ccc", "fednova", "cc_decay"):
+        assert not get_strategy(name).fused_capable
+
+
+# ---------------------------------------------------------------------------
+# cc_decay semantics: γ·Δ replay with geometric fade over consecutive skips
+# ---------------------------------------------------------------------------
+
+
+def test_cc_decay_skipper_contributes_decayed_delta(setup):
+    model, fd = setup
+    gamma = get_strategy("cc_decay").gamma
+    fed = FedConfig(strategy="cc_decay", local_steps=1)
+    state = init_fed_state(jax.random.PRNGKey(0), model, N)
+    rf = make_round_fn(model, fd, fed)
+    k = jnp.full((N,), 1, jnp.int32)
+    all_on = jnp.ones(N, bool)
+    state = rf(state, all_on, all_on, k)        # round 0: everyone trains
+    d0 = jax.tree.map(lambda d: np.asarray(d[0]), state["deltas"])
+    skip0 = jnp.asarray([False, True, True, True])
+    for step in range(1, 4):
+        state = rf(state, all_on, skip0, k)
+        for a, b in zip(jax.tree.leaves(d0),
+                        jax.tree.leaves(state["deltas"])):
+            np.testing.assert_allclose(gamma ** step * a, np.asarray(b)[0],
+                                       atol=1e-6)
+
+
+def test_cc_decay_gamma_one_matches_cc(setup):
+    model, fd = setup
+    probe = CCDecay(name="_test_gamma_one", gamma=1.0)
+    from repro.core import strategies as S
+    register(probe)
+    try:
+        k = jnp.full((N,), 1, jnp.int32)
+        all_on = jnp.ones(N, bool)
+        train = jnp.asarray([True, False, True, False])
+        outs = {}
+        for name in ("cc", "_test_gamma_one"):
+            fed = FedConfig(strategy=name, local_steps=1)
+            state = init_fed_state(jax.random.PRNGKey(0), model, N)
+            rf = make_round_fn(model, fd, fed)
+            state = rf(state, all_on, all_on, k)
+            state = rf(state, all_on, train, k)
+            outs[name] = state
+        for a, b in zip(jax.tree.leaves(outs["cc"]["params"]),
+                        jax.tree.leaves(outs["_test_gamma_one"]["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+    finally:
+        S._REGISTRY.pop("_test_gamma_one", None)
+
+
+# ---------------------------------------------------------------------------
+# Appendix-A cost accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def plan():
+    p = np.array([1.0, 0.5, 0.25, 0.125])
+    return make_plan("round_robin", p, 80, seed=0)
+
+
+def test_cost_report_client_variant(plan):
+    mb = 1000
+    rep = cost_report(plan, mb, variant="client")
+    trained = (plan.selection & plan.training).sum()
+    estimated = (plan.selection & ~plan.training).sum()
+    # Alg. 1: every selected client uploads a full model either way
+    assert rep["upload_bytes"] == (trained + estimated) * mb
+    assert rep["client_storage_bytes"] == mb
+    assert rep["server_storage_bytes"] == 0
+    assert rep["compute_saved_frac"] == pytest.approx(
+        1.0 - plan.compute_fraction())
+
+
+def test_cost_report_server_variant(plan):
+    mb = 1000
+    rep = cost_report(plan, mb, variant="server")
+    trained = (plan.selection & plan.training).sum()
+    estimated = (plan.selection & ~plan.training).sum()
+    # Alg. 2: skippers send one bit; the server stores every client's Δ
+    assert rep["upload_bytes"] == trained * mb + estimated // 8 + 1
+    assert rep["client_storage_bytes"] == 0
+    assert rep["server_storage_bytes"] == plan.n_clients * mb
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.5, 1.0])
+def test_cost_report_mixed_interpolates(plan, frac):
+    mb = 1000
+    mixed = cost_report(plan, mb, variant="mixed", mixed_client_frac=frac)
+    client = cost_report(plan, mb, variant="client")
+    server = cost_report(plan, mb, variant="server")
+    assert server["upload_bytes"] <= mixed["upload_bytes"] + 1
+    assert mixed["upload_bytes"] <= client["upload_bytes"]
+    # server-side storage shrinks as more clients hold their own Δ
+    assert mixed["server_storage_bytes"] == int(
+        (1 - frac) * plan.n_clients * mb)
+
+
+def test_cost_report_unknown_variant_raises(plan):
+    with pytest.raises(ValueError):
+        cost_report(plan, 1000, variant="nonsense")

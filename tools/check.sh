@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast pre-test lint: every Python file must at least compile.
+#   ./tools/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src benchmarks examples tools tests
+echo "compileall: OK"
