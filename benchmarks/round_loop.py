@@ -6,9 +6,15 @@ dominates the round's FLOPs. The scan executor stacks the (T, N) plan masks
 and runs each eval-free span as ONE ``lax.scan`` program. This benchmark
 times both on identical work and prints the speedup.
 
+Emits machine-readable results to ``BENCH_round_loop.json`` (``--json`` to
+change the path, empty string to disable) so CI and perf-trajectory tooling
+can diff runs.
+
     PYTHONPATH=src python benchmarks/round_loop.py [--rounds 100] [--reps 3]
 """
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -34,6 +40,10 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--local-steps", type=int, default=5)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_round_loop.json"),
+        help="write machine-readable results here ('' disables)")
     args = ap.parse_args()
 
     ds = make_dataset("teacher", n=2048, dim=24, n_classes=8, seed=0)
@@ -86,6 +96,22 @@ def main() -> None:
     print(f"speedup     : {loop_s / scan_s:8.2f}x")
     print(f"csv,round_loop,python,{loop_s * 1e6:.0f}")
     print(f"csv,round_loop,scan,{scan_s * 1e6:.0f}")
+    if args.json:
+        payload = {
+            "bench": "round_loop",
+            "config": {"rounds": args.rounds, "clients": args.clients,
+                       "local_steps": args.local_steps, "reps": args.reps},
+            "python_loop_s": loop_s,
+            "scan_s": scan_s,
+            "python_loop_ms_per_round": per_round_loop,
+            "scan_ms_per_round": per_round_scan,
+            "speedup": loop_s / scan_s,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

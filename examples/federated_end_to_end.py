@@ -1,26 +1,23 @@
-"""End-to-end federated driver (deliverable b): trains a ~100k-param CNN
-federation for a few hundred rounds with checkpoint/resume, comparing
-CC-FedAvg against its baselines under one fixed compute-heterogeneity
-profile, and prints a Table-I-style summary.
+"""End-to-end federated driver: trains a ~100k-param CNN federation for a
+few hundred rounds, comparing CC-FedAvg against its baselines under one
+fixed compute-heterogeneity profile via the sweep runner, demonstrates a
+REAL kill-and-resume (full state, bit-identical), and prints a
+Table-I-style summary.
 
     PYTHONPATH=src python examples/federated_end_to_end.py \
-        [--rounds 200] [--strategies cc s1 s2 fedavg_full]
+        [--rounds 200] [--strategies cc s1 s2 fedavg]
 """
 import argparse
 import os
+import shutil
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
-from repro.checkpoint.store import CheckpointManager
-from repro.core import FedConfig, cost_report, run_federated
-from repro.core.schedules import make_plan
-from repro.data.federated import build_federated
-from repro.data.partition import budget_law, partition_gamma
-from repro.data.synthetic import make_dataset, train_test_split
+from repro.api import ExperimentSpec, Session, run_sweep, format_table
 from repro.models.simple import make_classifier
 from repro.utils.logging import log
-from repro.utils.pytree import tree_bytes, tree_count_params
+from repro.utils.pytree import tree_count_params
 
 
 def main() -> None:
@@ -36,43 +33,73 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_fed_ckpt")
     args = ap.parse_args()
 
-    ds = make_dataset("image", n=2048, n_classes=8, hw=8, channels=1,
-                      seed=0)
-    train, test = train_test_split(ds)
-    parts = partition_gamma(train, args.clients, gamma=args.gamma)
-    fd = build_federated(train, parts)
-    model = make_classifier("cnn", input_shape=train.x.shape[1:],
-                            n_classes=8, width=args.width)
-    n_params = tree_count_params(model.init(
-        __import__("jax").random.PRNGKey(0)))
+    base = ExperimentSpec(
+        dataset="image", n_samples=2048, n_classes=8, hw=8, channels=1,
+        n_clients=args.clients, partition="gamma", gamma=args.gamma,
+        budget="power", beta=args.beta, model="cnn", width=args.width,
+        strategy="cc", local_steps=5, batch_size=32, lr=0.05,
+        schedule="adhoc", rounds=args.rounds,
+        eval_every=max(1, args.rounds // 4), seed=0)
+    n_params = tree_count_params(make_classifier(
+        "cnn", input_shape=(base.hw, base.hw, base.channels),
+        n_classes=base.n_classes, width=base.width).init(
+            jax.random.PRNGKey(0)))
     log(f"CNN federation: {args.clients} clients, {n_params:,} params, "
         f"{args.rounds} rounds, γ={args.gamma}")
-    p = budget_law(args.clients, args.beta)
 
-    results = {}
-    for strat in args.strategies:
-        kind = "full" if strat == "fedavg" else "adhoc"
-        plan = make_plan(kind, p, args.rounds, seed=0)
-        fed = FedConfig(strategy=strat, local_steps=5, batch_size=32,
-                        lr=0.05)
-        state, metrics = run_federated(
-            model, fd, fed, plan, x_test=jnp.asarray(test.x),
-            y_test=jnp.asarray(test.y), eval_every=args.rounds // 4,
-            verbose=True)
-        mgr = CheckpointManager(os.path.join(args.ckpt_dir, strat), keep=1)
-        path = mgr.save(args.rounds, state["params"],
-                        extra={"acc": metrics.last("test_acc")})
-        rep = cost_report(plan, tree_bytes(state["params"]))
-        results[strat] = (metrics.last("test_acc"),
-                          rep["compute_saved_frac"])
-        log(f"saved {path}")
+    # ---- strategy comparison via the sweep runner ------------------------
+    # fedavg means full participation; everyone else runs the ad-hoc plan
+    constrained = [s for s in args.strategies if s != "fedavg"]
+    result = run_sweep(base, {"strategy": constrained})
+    if "fedavg" in args.strategies:
+        sess = Session.from_spec(
+            base.replace(strategy="fedavg", schedule="full"))
+        sess.run()
+        result["cells"]["strategy=fedavg,schedule=full"] = {
+            "overrides": {"strategy": "fedavg", "schedule": "full"},
+            "acc": sess.metrics.last("test_acc"),
+            "acc_best": sess.metrics.best("test_acc"),
+            "cost": sess.cost_report(),
+        }
+        result["ranking"] = sorted(
+            result["cells"], key=lambda k: -result["cells"][k]["acc"])
 
-    print(f"\n{'strategy':<14}{'accuracy':>10}{'compute saved':>16}")
-    for strat, (acc, saved) in sorted(results.items(),
-                                      key=lambda kv: -kv[1][0]):
-        print(f"{strat:<14}{acc:>10.3f}{saved:>15.1%}")
+    # ---- real kill-and-resume -------------------------------------------
+    # run cc to the halfway point, checkpoint the FULL state (params, Δ
+    # history, RNG key, round counter, metrics), throw the session away,
+    # rebuild purely from disk, and finish: bit-identical to uninterrupted.
+    ckpt = os.path.join(args.ckpt_dir, "cc")
+    if os.path.isdir(ckpt):          # stale checkpoints would shadow ours
+        shutil.rmtree(ckpt)
+    half = Session.from_spec(base, ckpt_dir=ckpt)
+    half.run(args.rounds // 2)
+    path = half.save()
+    log(f"killed at round {half.t}; checkpoint {path}")
+    del half
+    resumed = Session.restore_from(ckpt)
+    log(f"resumed at round {resumed.t}/{args.rounds} from spec in "
+        "checkpoint")
+    resumed.run()
+    cc_key = next((k for k in result["cells"]
+                   if result["cells"][k]["overrides"].get("strategy")
+                   == "cc"), None)
+    if cc_key is None:               # cc wasn't in --strategies: no
+        log(f"resume finished at acc "   # uninterrupted twin to compare to
+            f"{resumed.metrics.last('test_acc'):.4f}")
+    else:
+        uninterrupted = result["cells"][cc_key]["acc"]
+        match = np.isclose(resumed.metrics.last("test_acc"), uninterrupted,
+                           atol=0, rtol=0)
+        log(f"resume acc {resumed.metrics.last('test_acc'):.4f} vs "
+            f"uninterrupted {uninterrupted:.4f} — "
+            f"{'bit-identical' if match else 'MISMATCH'}")
+
+    print()
+    print(format_table(result))
     best_constrained = max(
-        (s for s in results if s != "fedavg"), key=lambda s: results[s][0])
+        (k for k in result["cells"]
+         if result["cells"][k]["overrides"].get("strategy") != "fedavg"),
+        key=lambda k: result["cells"][k]["acc"])
     print(f"\nbest constrained strategy: {best_constrained} "
           f"(paper's claim: cc)")
 

@@ -1,50 +1,41 @@
-"""Quickstart: CC-FedAvg in ~40 lines of public API.
+"""Quickstart: CC-FedAvg through the experiment API in ~30 lines.
 
 Eight clients with heterogeneous compute budgets collaboratively train a
 classifier on non-IID synthetic data. Clients with p_i < 1 skip local
 training in (1 − p_i) of rounds and upload their previous update Δ_{t−1}
 instead (Strategy 3) — same convergence, ~45% less client compute.
 
+An :class:`ExperimentSpec` declares the whole run; a :class:`Session`
+executes it stepwise (eval-free spans run as one jitted ``lax.scan``).
+The spec serializes to JSON, so the same run works as
+``python -m repro run spec.json``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
+from repro.api import ExperimentSpec, Session, VerboseLogger
+from repro.core import available_strategies
 
-from repro.core import (FedConfig, available_strategies, cost_report,
-                        run_federated)
-from repro.core.schedules import make_plan
-from repro.data.federated import build_federated
-from repro.data.partition import budget_law, partition_gamma
-from repro.data.synthetic import make_dataset, train_test_split
-from repro.models.simple import make_classifier
-from repro.utils.pytree import tree_bytes
-
-N_CLIENTS, ROUNDS = 8, 80
-
-# 1. data: synthetic 8-class task, 50% non-IID across 8 clients
-ds = make_dataset("teacher", n=2048, dim=24, n_classes=8, seed=0)
-train, test = train_test_split(ds)
-parts = partition_gamma(train, N_CLIENTS, gamma=0.5)
-fed_data = build_federated(train, parts)
-
-# 2. model: the paper's MLP
-model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
-
-# 3. budgets: p_i = (1/2)^⌊β·i/N⌋ → {1, 1/2, 1/4, 1/8} (paper §VI-A)
-p = budget_law(N_CLIENTS, beta=4)
-plan = make_plan("adhoc", p, ROUNDS)          # each client decides per round
-
-# 4. run CC-FedAvg (Algorithm 1). Any name from the strategy registry works
-#    here — eval-free spans execute as one jitted lax.scan program.
+# 1. declare the experiment: data, partition, budgets, model, plan — one
+#    serializable object. p_i = (1/2)^⌊β·i/N⌋ → {1, 1/2, 1/4, 1/8} (§VI-A)
+spec = ExperimentSpec(
+    dataset="teacher", n_samples=2048, dim=24, n_classes=8,   # data
+    n_clients=8, partition="gamma", gamma=0.5,                # 50% non-IID
+    budget="power", beta=4,                                   # budgets
+    model="mlp", width=8,                                     # paper's MLP
+    strategy="cc", local_steps=5, batch_size=32, lr=0.1,      # CC-FedAvg
+    schedule="adhoc", rounds=80, eval_every=20,               # plan
+)
 print("registered strategies:", ", ".join(available_strategies()))
-fed = FedConfig(strategy="cc", local_steps=5, batch_size=32, lr=0.1)
-state, metrics = run_federated(model, fed_data, fed, plan,
-                               x_test=jnp.asarray(test.x),
-                               y_test=jnp.asarray(test.y),
-                               eval_every=20, verbose=True)
+print("spec:", spec.to_json()[:120].replace("\n", " "), "...")
 
-# 5. what did it cost? (Appendix-A accounting, Alg. 1 = client variant)
-report = cost_report(plan, tree_bytes(state["params"]), variant="client")
-print(f"\nfinal accuracy     : {metrics.last('test_acc'):.3f}")
+# 2. run it. Any name from the strategy registry works in `strategy=`;
+#    Session.run() is resumable — save()/restore() checkpoint everything.
+session = Session.from_spec(spec, callbacks=[VerboseLogger()])
+session.run()
+
+# 3. what did it cost? (Appendix-A accounting, Alg. 1 = client variant)
+report = session.cost_report()
+print(f"\nfinal accuracy     : {session.metrics.last('test_acc'):.3f}")
 print(f"client compute cut : {report['compute_saved_frac']:.1%} "
       f"vs FedAvg(full)")
 print(f"total upload       : {report['upload_bytes'] / 1e6:.1f} MB")

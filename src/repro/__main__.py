@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro`` → the experiment CLI."""
+import sys
+
+from repro.api.cli import main
+
+sys.exit(main())

@@ -1,0 +1,27 @@
+"""Public experiment API: declarative specs, resumable sessions, sweeps.
+
+This package is the repo's front door:
+
+* :class:`~repro.api.spec.ExperimentSpec` — a serializable description of
+  one federated run (``to_dict``/``from_dict`` round-trip exactly);
+* :class:`~repro.api.session.Session` — stepwise execution with
+  ``run``/``step``/``eval``/``save``/``restore`` and bit-identical resume;
+* :mod:`~repro.api.callbacks` — lifecycle hooks replacing the old
+  ``verbose``/``probe_client`` keywords;
+* :func:`~repro.api.sweep.run_sweep` — strategy/budget grids with a
+  Table-I-style comparison;
+* ``python -m repro`` — ``run`` / ``sweep`` / ``resume`` / ``init``
+  subcommands driven by spec files (:mod:`repro.api.cli`).
+
+The legacy ``repro.core.engine.run_federated`` remains as a thin shim
+over :class:`Session`.
+"""
+from repro.api.callbacks import (  # noqa: F401
+    Callback,
+    CheckpointCallback,
+    ProbeCallback,
+    VerboseLogger,
+)
+from repro.api.session import Session, plan_k_active  # noqa: F401
+from repro.api.spec import Bundle, ExperimentSpec  # noqa: F401
+from repro.api.sweep import expand_grid, format_table, run_sweep  # noqa: F401

@@ -1,0 +1,93 @@
+"""Session lifecycle hooks.
+
+The callback protocol replaces the ``verbose`` / ``probe_client`` keyword
+special cases of the old ``run_federated`` monolith: a callback receives
+the live :class:`~repro.api.session.Session` and may read its state or
+record extra metrics through ``session.metrics``.
+
+Hooks:
+
+* ``on_round_end(session, t)``   — after round ``t`` completes (``t`` is the
+  1-based count of completed rounds). Under the scan executor this fires at
+  span boundaries only (mid-span rounds never touch the host); callbacks
+  that must observe *every* round set ``needs_python_loop = True`` and the
+  session falls back to the per-round executor.
+* ``on_eval(session, t, acc)``   — after each test-set evaluation.
+* ``on_checkpoint(session, t, path)`` — after ``session.save()``.
+"""
+from __future__ import annotations
+
+from repro.utils.logging import log
+
+
+class Callback:
+    """Base class: every hook is a no-op; override what you need."""
+
+    #: set True when the callback must run between *consecutive* rounds —
+    #: the session then uses the per-round python executor for correctness
+    needs_python_loop: bool = False
+
+    #: request a host sync (and an ``on_round_end`` firing) every N rounds;
+    #: the scan executor splits its spans at these rounds so the callback
+    #: keeps its cadence without forcing the per-round loop
+    sync_every: int | None = None
+
+    def on_round_end(self, session, t: int) -> None:
+        pass
+
+    def on_eval(self, session, t: int, acc: float) -> None:
+        pass
+
+    def on_checkpoint(self, session, t: int, path: str) -> None:
+        pass
+
+
+class VerboseLogger(Callback):
+    """The old ``verbose=True``: one log line per evaluation."""
+
+    def on_eval(self, session, t, acc):
+        log(f"round {t}/{session.plan.rounds}",
+            strategy=session.fed.strategy, acc=f"{acc:.4f}")
+
+
+class ProbeCallback(Callback):
+    """The old ``probe_client=i``: Fig.-2 estimation-quality probes.
+
+    Records the distance between the estimated local models (Strategies
+    2/3) and the true locally-trained model for one client, every round.
+    Matches the legacy cadence exactly: the probe of the monolith ran at
+    the *start* of round t for t ≥ 1, which is the end of round t — both
+    see the same post-round state and record at step t.
+    """
+
+    needs_python_loop = True
+
+    def __init__(self, client: int):
+        self.client = client
+        self._probe = None
+
+    def on_round_end(self, session, t):
+        if t >= session.plan.rounds:     # legacy loop never probed after
+            return                       # the final round
+        if self._probe is None:
+            from repro.core.engine import make_probe_fn
+            self._probe = make_probe_fn(session.model, session.data,
+                                        session.fed, self.client)
+        import jax
+        pk = jax.random.fold_in(session.state["key"], 1234)
+        pm = self._probe(session.state, pk)
+        session.metrics.record(t, **{k: float(v) for k, v in pm.items()})
+
+
+class CheckpointCallback(Callback):
+    """Periodic full-state checkpointing through the session's manager."""
+
+    def __init__(self, every: int):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.every = every
+        self.sync_every = every
+
+    def on_round_end(self, session, t):
+        if t % self.every == 0 and t < session.plan.rounds:
+            session.save()               # final-round save is the caller's

@@ -1,0 +1,177 @@
+"""``python -m repro`` — run federated experiments from spec files.
+
+Subcommands:
+
+* ``init SPEC.json [--set field=value ...]``
+      write a (possibly overridden) default spec file to start from;
+* ``run SPEC.json [--set field=value ...] [--ckpt-dir D] [--save-every N]``
+      run one session from a spec, optionally checkpointing as it goes;
+* ``resume CKPT_DIR [--rounds N]``
+      continue an interrupted run purely from its checkpoint directory
+      (the spec travels inside the checkpoint);
+* ``sweep SPEC.json --grid field=v1,v2 [--grid ...]``
+      expand the spec over grids and print a Table-I-style comparison.
+
+Examples:
+    python -m repro init /tmp/exp.json --set rounds=3 --set strategy=cc
+    python -m repro run /tmp/exp.json --ckpt-dir /tmp/ckpt --save-every 10
+    python -m repro resume /tmp/ckpt
+    python -m repro sweep /tmp/exp.json --grid strategy=cc,s2,fedavg
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.api.callbacks import CheckpointCallback, VerboseLogger
+from repro.api.session import Session
+from repro.api.spec import ExperimentSpec
+from repro.api.sweep import format_table, run_sweep
+from repro.utils.logging import log
+
+
+def _parse_value(text: str):
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return text                       # bare strings need no quotes
+
+
+def _parse_sets(pairs: list[str]) -> dict:
+    out = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"--set expects field=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        out[k] = _parse_value(v)
+    return out
+
+
+def _parse_grids(pairs: list[str]) -> dict:
+    out = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"--grid expects field=v1,v2,..., got {pair!r}")
+        k, vs = pair.split("=", 1)
+        out[k] = [_parse_value(v) for v in vs.split(",")]
+    return out
+
+
+def _load_spec(path: str, sets: list[str]) -> ExperimentSpec:
+    spec = ExperimentSpec.load(path)
+    overrides = _parse_sets(sets)
+    return spec.replace(**overrides) if overrides else spec
+
+
+def _dump(obj: dict, path: str | None) -> None:
+    if path:
+        with open(path, "w") as f:
+            json.dump(obj, f, indent=2)
+        log(f"wrote {path}")
+
+
+def cmd_init(args) -> int:
+    # from_dict rather than the constructor: typo'd --set fields get the
+    # "unknown spec fields" error instead of a raw TypeError
+    spec = ExperimentSpec.from_dict(_parse_sets(args.set))
+    spec.save(args.spec)
+    log(f"wrote spec {args.spec}", strategy=spec.strategy,
+        rounds=spec.rounds)
+    return 0
+
+
+def cmd_run(args) -> int:
+    spec = _load_spec(args.spec, args.set)
+    callbacks = [] if args.quiet else [VerboseLogger()]
+    if args.save_every and not args.ckpt_dir:
+        raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
+    if args.save_every:
+        callbacks.append(CheckpointCallback(args.save_every))
+    sess = Session.from_spec(spec, callbacks=callbacks,
+                             ckpt_dir=args.ckpt_dir or None)
+    sess.run()
+    if args.ckpt_dir:
+        sess.save()
+    rep = sess.cost_report()
+    log("run done", **{k: f"{v:.4f}" if isinstance(v, float) else v
+                       for k, v in sess.summary().items()})
+    out = {"spec": spec.to_dict(), "summary": sess.summary(),
+           "metrics": sess.metrics.history, "cost": rep}
+    _dump(out, args.out)
+    print(json.dumps(sess.summary()))
+    return 0
+
+
+def cmd_resume(args) -> int:
+    callbacks = [] if args.quiet else [VerboseLogger()]
+    sess = Session.restore_from(args.ckpt_dir, callbacks=callbacks)
+    log(f"resumed at round {sess.t}/{sess.plan.rounds}",
+        strategy=sess.fed.strategy)
+    sess.run(args.rounds)
+    sess.save()
+    out = {"summary": sess.summary(), "metrics": sess.metrics.history}
+    _dump(out, args.out)
+    print(json.dumps(sess.summary()))
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    spec = _load_spec(args.spec, args.set)
+    grid = _parse_grids(args.grid)
+    result = run_sweep(spec, grid, verbose=not args.quiet)
+    _dump(result, args.out)
+    print(format_table(result))
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro",
+                                 description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("init", help="write a default spec file")
+    p.add_argument("spec")
+    p.add_argument("--set", action="append", default=[],
+                   metavar="FIELD=VALUE")
+    p.set_defaults(fn=cmd_init)
+
+    p = sub.add_parser("run", help="run one session from a spec")
+    p.add_argument("spec")
+    p.add_argument("--set", action="append", default=[],
+                   metavar="FIELD=VALUE")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--save-every", type=int, default=0,
+                   help="checkpoint every N rounds (with --ckpt-dir)")
+    p.add_argument("--out", default="", help="write metrics JSON here")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("resume", help="continue from a checkpoint dir")
+    p.add_argument("ckpt_dir")
+    p.add_argument("--rounds", type=int, default=None,
+                   help="how many more rounds (default: finish the plan)")
+    p.add_argument("--out", default="")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_resume)
+
+    p = sub.add_parser("sweep", help="grid-expand a spec and compare")
+    p.add_argument("spec")
+    p.add_argument("--set", action="append", default=[],
+                   metavar="FIELD=VALUE")
+    p.add_argument("--grid", action="append", default=[], required=True,
+                   metavar="FIELD=V1,V2")
+    p.add_argument("--out", default="")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_sweep)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

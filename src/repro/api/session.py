@@ -1,0 +1,275 @@
+"""Stepwise, resumable federated sessions.
+
+A :class:`Session` owns one federated run: the materialized model/data/
+plan, the full round state, the metric history and the eval cadence. It
+wraps the executors of :mod:`repro.core.rounds` — per-round jit or
+``lax.scan`` spans (``use_fused=True`` routes rounds through the Pallas
+kernel) — behind ``run(n_rounds)`` / ``step()`` / ``eval()`` / ``save()``
+/ ``restore()``.
+
+Determinism contract (pinned by ``tests/test_api.py``):
+
+* a Session run and the legacy ``run_federated`` produce identical final
+  params and metric streams;
+* ``save()`` checkpoints the FULL state (params, Δ history, stale local
+  models, RNG key, round counter, metrics), so a killed run restored with
+  :meth:`Session.restore_from` continues bit-identically — evaluation
+  points follow the *absolute* round cadence, never the resume point.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.callbacks import Callback
+from repro.checkpoint.store import CheckpointManager
+from repro.core.evaluation import evaluate
+from repro.core.rounds import (FedConfig, init_fed_state, make_round_fn,
+                               make_span_runner, span_boundaries)
+from repro.core.schedules import Plan, fednova_local_steps
+from repro.data.federated import FederatedData
+from repro.models.simple import Classifier
+from repro.utils.logging import MetricLogger
+from repro.utils.pytree import PyTree, tree_bytes
+
+
+def plan_k_active(data: FederatedData, fed: FedConfig,
+                  plan: Plan) -> jax.Array:
+    """Per-client local-step counts: FedNova spends its budget as fewer
+    iterations every round; everyone else runs the full K."""
+    if fed.strategy == "fednova":
+        k_active_all = fednova_local_steps(plan.p, fed.local_steps)
+    else:
+        k_active_all = np.full(data.n_clients, fed.local_steps, np.int32)
+    return jnp.asarray(k_active_all)
+
+
+class Session:
+    """One federated run with explicit control over its lifecycle."""
+
+    def __init__(self, model: Classifier, data: FederatedData,
+                 fed: FedConfig, plan: Plan, *, x_test=None, y_test=None,
+                 eval_every: int = 10, executor: str = "scan",
+                 use_fused: bool = False,
+                 callbacks: Iterable[Callback] = (),
+                 ckpt_dir: str | None = None, keep: int = 3,
+                 spec=None):
+        if executor not in ("scan", "python"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.model = model
+        self.data = data
+        self.fed = fed
+        self.plan = plan
+        self.x_test = x_test
+        self.y_test = y_test
+        self.eval_every = eval_every
+        self.executor = executor
+        self.use_fused = use_fused
+        self.callbacks: list[Callback] = list(callbacks)
+        self.spec = spec
+        self.metrics = MetricLogger()
+        self.k_active = plan_k_active(data, fed, plan)
+        self.state: PyTree = init_fed_state(jax.random.PRNGKey(fed.seed),
+                                            model, data.n_clients)
+        self._t = 0                              # completed rounds
+        self._sel = jnp.asarray(plan.selection)
+        self._train = jnp.asarray(plan.training)
+        self._round_fn = None
+        self._span_runner = None
+        self._mgr = (CheckpointManager(ckpt_dir, keep=keep)
+                     if ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec, *, callbacks: Iterable[Callback] = (),
+                  ckpt_dir: str | None = None, keep: int = 3) -> "Session":
+        """Materialize an :class:`~repro.api.spec.ExperimentSpec`."""
+        b = spec.build()
+        return cls(b.model, b.data, b.fed, b.plan, x_test=b.x_test,
+                   y_test=b.y_test, eval_every=spec.eval_every,
+                   executor=spec.executor, use_fused=spec.use_fused,
+                   callbacks=callbacks, ckpt_dir=ckpt_dir, keep=keep,
+                   spec=spec)
+
+    @classmethod
+    def restore_from(cls, ckpt_dir: str, *, step: int | None = None,
+                     callbacks: Iterable[Callback] = ()) -> "Session":
+        """Rebuild a session purely from a checkpoint directory: the spec
+        stored in the checkpoint reconstructs data/model/plan, then the
+        full state and metric history are restored."""
+        from repro.api.spec import ExperimentSpec
+        mgr = CheckpointManager(ckpt_dir)
+        extra = mgr.read_extra(step)
+        if not extra.get("spec"):
+            raise ValueError(
+                f"checkpoint in {ckpt_dir!r} carries no spec; restore it "
+                "through a Session constructed from the original objects")
+        spec = ExperimentSpec.from_dict(extra["spec"])
+        sess = cls.from_spec(spec, callbacks=callbacks, ckpt_dir=ckpt_dir)
+        sess.restore(step=step)
+        return sess
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    @property
+    def t(self) -> int:
+        """Completed rounds (== ``int(state['round'])``)."""
+        return self._t
+
+    @property
+    def done(self) -> bool:
+        return self._t >= self.plan.rounds
+
+    def _get_round_fn(self):
+        if self._round_fn is None:
+            self._round_fn = make_round_fn(self.model, self.data, self.fed,
+                                           fused=self.use_fused)
+        return self._round_fn
+
+    def _get_span_runner(self):
+        if self._span_runner is None:
+            self._span_runner = make_span_runner(
+                self.model, self.data, self.fed, fused=self.use_fused)
+        return self._span_runner
+
+    def step(self) -> PyTree:
+        """Advance exactly one round (per-round executor) and fire
+        ``on_round_end``. Evaluation stays on the absolute cadence and is
+        driven by :meth:`run`; a bare ``step()`` never records metrics."""
+        t = self._t
+        if t >= self.plan.rounds:
+            raise RuntimeError(
+                f"plan exhausted: {t}/{self.plan.rounds} rounds done")
+        self.state = self._get_round_fn()(
+            self.state, self._sel[t], self._train[t], self.k_active)
+        self._t = t + 1
+        for cb in self.callbacks:
+            cb.on_round_end(self, self._t)
+        return self.state
+
+    def _eval_due(self, t: int) -> bool:
+        return t % self.eval_every == 0 or t == self.plan.rounds
+
+    def _run_eval(self) -> float:
+        acc = self.eval()
+        self.metrics.record(self._t, test_acc=acc)
+        for cb in self.callbacks:
+            cb.on_eval(self, self._t, acc)
+        return acc
+
+    def run(self, n_rounds: int | None = None) -> "Session":
+        """Advance ``n_rounds`` (default: to the end of the plan),
+        evaluating on the absolute ``eval_every`` cadence plus the final
+        plan round. Uses the scan executor between host-sync points unless
+        ``executor='python'`` or a callback needs the per-round loop."""
+        total = self.plan.rounds
+        target = (total if n_rounds is None
+                  else min(total, self._t + n_rounds))
+        if target <= self._t:               # nothing to do; never re-fires
+            return self                     # hooks or re-records an eval
+        needs_python = (self.executor == "python"
+                        or any(cb.needs_python_loop for cb in self.callbacks))
+        if needs_python:
+            while self._t < target:
+                self.step()
+                if self._eval_due(self._t):
+                    self._run_eval()
+            return self
+
+        eval_stops = set(span_boundaries(total, self.eval_every))
+        stops = set(eval_stops)
+        for cb in self.callbacks:
+            if cb.sync_every:
+                stops.update(range(cb.sync_every, total + 1, cb.sync_every))
+        stops = sorted(s for s in stops if self._t < s <= target)
+        if not stops or stops[-1] != target:
+            stops.append(target)
+        run_span = self._get_span_runner()
+        for stop in stops:
+            if stop > self._t:
+                self.state = run_span(self.state,
+                                      self._sel[self._t:stop],
+                                      self._train[self._t:stop],
+                                      self.k_active)
+                self._t = stop
+            for cb in self.callbacks:
+                cb.on_round_end(self, self._t)
+            if self._t in eval_stops:
+                self._run_eval()
+        return self
+
+    def eval(self) -> float:
+        """Test-set accuracy of the current global model (no recording)."""
+        if self.x_test is None or self.y_test is None:
+            raise ValueError("session has no test set; pass x_test/y_test")
+        return evaluate(self.model, self.state["params"],
+                        self.x_test, self.y_test)
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+
+    def save(self, ckpt_dir: str | None = None) -> str:
+        """Checkpoint the full federated state + metrics + spec; the file
+        alone suffices for :meth:`restore_from` to continue the run."""
+        mgr = self._require_mgr(ckpt_dir)
+        extra = {
+            "round": self._t,
+            "metrics": self.metrics.history,
+            "spec": self.spec.to_dict() if self.spec is not None else None,
+        }
+        path = mgr.save_fed(self._t, self.state, extra=extra)
+        for cb in self.callbacks:
+            cb.on_checkpoint(self, self._t, path)
+        return path
+
+    def restore(self, step: int | None = None,
+                ckpt_dir: str | None = None) -> "Session":
+        """Restore full state + metric history from a checkpoint written
+        by :meth:`save` (in-place; session config must match)."""
+        mgr = self._require_mgr(ckpt_dir)
+        like = init_fed_state(jax.random.PRNGKey(self.fed.seed),
+                              self.model, self.data.n_clients)
+        state, extra = mgr.restore(like, step=step)
+        self.state = state
+        self._t = int(extra.get("round", extra.get("step", 0)))
+        history = extra.get("metrics") or {}
+        self.metrics = MetricLogger(history={
+            k: [(int(s), float(v)) for s, v in series]
+            for k, series in history.items()})
+        return self
+
+    def _require_mgr(self, ckpt_dir: str | None) -> CheckpointManager:
+        if ckpt_dir is not None:
+            self._mgr = CheckpointManager(ckpt_dir)
+        if self._mgr is None:
+            raise ValueError("no checkpoint directory: pass ckpt_dir to the "
+                             "Session or to save()/restore()")
+        return self._mgr
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def cost_report(self, variant: str | None = None,
+                    mixed_client_frac: float = 0.5) -> dict:
+        """Appendix-A storage/upload accounting for this run's plan."""
+        from repro.core.engine import cost_report
+        return cost_report(self.plan, tree_bytes(self.state["params"]),
+                           variant=variant or self.fed.variant,
+                           mixed_client_frac=mixed_client_frac)
+
+    def summary(self) -> dict:
+        out = {"rounds_done": self._t, "strategy": self.fed.strategy}
+        if "test_acc" in self.metrics.history:
+            out["test_acc"] = self.metrics.last("test_acc")
+            out["test_acc_best"] = self.metrics.best("test_acc")
+        return out

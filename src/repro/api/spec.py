@@ -1,0 +1,221 @@
+"""Declarative, serializable experiment specifications.
+
+An :class:`ExperimentSpec` is the single source of truth for a federated
+run: dataset + partition + budget law + model + :class:`FedConfig` fields +
+plan kind + eval cadence, all as plain scalars, so a run is reproducible
+from its spec alone. ``to_dict``/``from_dict`` round-trip exactly (pinned
+by test) and ``save``/``load`` move specs through JSON files — the unit of
+work for the sweep runner (:mod:`repro.api.sweep`) and the ``python -m
+repro`` CLI.
+
+``build()`` materializes the spec into the concrete objects the round
+executors consume (model, stacked client data, plan, test split); it is
+deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rounds import FedConfig
+from repro.core.schedules import Plan, make_plan
+from repro.data.federated import FederatedData, build_federated
+from repro.data.partition import (budget_law, partition_classes,
+                                  partition_gamma, two_group_budget)
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import Classifier, make_classifier
+
+#: schema version embedded in serialized specs; bump on breaking changes
+SPEC_VERSION = 1
+
+_DATASETS = ("gaussian", "teacher", "image")
+_PARTITIONS = ("gamma", "classes")
+_BUDGETS = ("power", "two_group", "uniform", "explicit")
+_MODELS = ("mlp", "cnn", "resnet18")
+_SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
+_EXECUTORS = ("scan", "python")
+
+
+@dataclass(frozen=True)
+class Bundle:
+    """The materialized objects a :class:`repro.api.session.Session` runs."""
+    model: Classifier
+    data: FederatedData
+    fed: FedConfig
+    plan: Plan
+    x_test: jnp.ndarray
+    y_test: jnp.ndarray
+    p: np.ndarray
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything needed to reproduce one federated run, as plain scalars."""
+
+    # ---- data -----------------------------------------------------------
+    dataset: str = "teacher"       # gaussian | teacher | image
+    n_samples: int = 2048
+    dim: int = 24                  # feature dim (gaussian/teacher)
+    hw: int = 8                    # image side (image)
+    channels: int = 1              # image channels (image)
+    n_classes: int = 8
+    test_frac: float = 0.2
+
+    # ---- partition ------------------------------------------------------
+    n_clients: int = 8
+    partition: str = "gamma"       # gamma | classes
+    gamma: float = 0.5             # IID share (partition="gamma")
+    classes_per_client: int = 2    # (partition="classes")
+
+    # ---- compute budgets ------------------------------------------------
+    budget: str = "power"          # power | two_group | uniform | explicit
+    beta: int = 4                  # p_i = (1/2)^⌊β·i/N⌋  (budget="power")
+    r: float = 0.5                 # constrained fraction (budget="two_group")
+    w: int = 4                     # 1/p of constrained    (budget="two_group")
+    p: tuple[float, ...] | None = None   # explicit budgets (budget="explicit")
+
+    # ---- model ----------------------------------------------------------
+    model: str = "mlp"             # mlp | cnn | resnet18
+    width: int = 8
+
+    # ---- federated config (mirrors FedConfig) ---------------------------
+    strategy: str = "cc"
+    variant: str = "client"
+    local_steps: int = 5
+    batch_size: int = 32
+    lr: float = 0.05
+    tau: int = 100
+
+    # ---- plan -----------------------------------------------------------
+    schedule: str = "adhoc"
+    rounds: int = 80
+    participation: float = 1.0
+
+    # ---- execution ------------------------------------------------------
+    eval_every: int = 20
+    executor: str = "scan"
+    use_fused: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        _check("dataset", self.dataset, _DATASETS)
+        _check("partition", self.partition, _PARTITIONS)
+        _check("budget", self.budget, _BUDGETS)
+        _check("model", self.model, _MODELS)
+        _check("schedule", self.schedule, _SCHEDULES)
+        _check("executor", self.executor, _EXECUTORS)
+        if self.budget == "explicit":
+            if not self.p:
+                raise ValueError("budget='explicit' requires p=(...)")
+            if len(self.p) != self.n_clients:
+                raise ValueError(
+                    f"explicit budgets need one entry per client: "
+                    f"len(p)={len(self.p)} vs n_clients={self.n_clients}")
+            object.__setattr__(self, "p", tuple(float(v) for v in self.p))
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
+        self.fed_config()               # validates strategy name eagerly
+
+    # ---- serialization --------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["spec_version"] = SPEC_VERSION
+        if d["p"] is not None:
+            d["p"] = list(d["p"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("spec_version", SPEC_VERSION)
+        if version > SPEC_VERSION:
+            raise ValueError(f"spec_version {version} is newer than "
+                             f"supported {SPEC_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown spec fields: {sorted(unknown)}")
+        if d.get("p") is not None:
+            d["p"] = tuple(d["p"])
+        return cls(**d)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ---- materialization ------------------------------------------------
+
+    def fed_config(self) -> FedConfig:
+        return FedConfig(strategy=self.strategy, variant=self.variant,
+                         local_steps=self.local_steps,
+                         batch_size=self.batch_size, lr=self.lr,
+                         tau=self.tau, seed=self.seed)
+
+    def budgets(self) -> np.ndarray:
+        if self.budget == "power":
+            return budget_law(self.n_clients, self.beta)
+        if self.budget == "two_group":
+            return two_group_budget(self.n_clients, self.r, self.w)
+        if self.budget == "uniform":
+            return np.ones(self.n_clients)
+        return np.asarray(self.p, float)          # explicit
+
+    def build(self) -> Bundle:
+        """Materialize data, model, budgets and plan (deterministic in
+        ``seed``)."""
+        if self.dataset == "image":
+            ds = make_dataset("image", n=self.n_samples,
+                              n_classes=self.n_classes, hw=self.hw,
+                              channels=self.channels, seed=self.seed)
+        else:
+            ds = make_dataset(self.dataset, n=self.n_samples, dim=self.dim,
+                              n_classes=self.n_classes, seed=self.seed)
+        train, test = train_test_split(ds, test_frac=self.test_frac,
+                                       seed=self.seed)
+        if self.partition == "gamma":
+            parts = partition_gamma(train, self.n_clients, gamma=self.gamma,
+                                    seed=self.seed)
+        else:
+            parts = partition_classes(train, self.n_clients,
+                                      self.classes_per_client,
+                                      seed=self.seed)
+        data = build_federated(train, parts)
+        model = make_classifier(self.model, input_shape=train.x.shape[1:],
+                                n_classes=self.n_classes, width=self.width)
+        p = self.budgets()
+        plan = make_plan(self.schedule, p, self.rounds,
+                         participation_ratio=self.participation,
+                         seed=self.seed)
+        return Bundle(model=model, data=data, fed=self.fed_config(),
+                      plan=plan, x_test=jnp.asarray(test.x),
+                      y_test=jnp.asarray(test.y), p=p)
+
+
+def _check(name: str, value: str, allowed: Sequence[str]) -> None:
+    if value not in allowed:
+        raise ValueError(f"{name} must be one of {tuple(allowed)}, "
+                         f"got {value!r}")

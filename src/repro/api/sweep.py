@@ -1,0 +1,87 @@
+"""Sweep runner: expand a base spec over parameter grids, run sessions,
+emit a Table-I-style comparison.
+
+The paper's headline result is a *family* of runs — strategies × budget
+profiles × schedules under one data/model scenario. A sweep is exactly
+that: a base :class:`~repro.api.spec.ExperimentSpec` plus a grid of field
+overrides. Each cell runs as its own :class:`~repro.api.session.Session`
+and reports final/best accuracy plus the Appendix-A ``cost_report``.
+
+    spec = ExperimentSpec(rounds=80)
+    result = run_sweep(spec, {"strategy": ["cc", "s2", "fedavg"],
+                              "beta": [2, 4]})
+    print(format_table(result))
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.api.session import Session
+from repro.api.spec import ExperimentSpec
+from repro.utils.logging import log
+
+
+def expand_grid(base: ExperimentSpec,
+                grid: Mapping[str, Sequence[Any]]
+                ) -> list[tuple[dict, ExperimentSpec]]:
+    """Cartesian product of field overrides; returns (overrides, spec)
+    per cell, in deterministic field-then-value order."""
+    if not grid:
+        return [({}, base)]
+    names = list(grid)
+    cells = []
+    for values in itertools.product(*(grid[n] for n in names)):
+        overrides = dict(zip(names, values))
+        cells.append((overrides, base.replace(**overrides)))
+    return cells
+
+
+def _cell_key(overrides: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in overrides.items()) or "base"
+
+
+def run_sweep(base: ExperimentSpec, grid: Mapping[str, Sequence[Any]],
+              *, verbose: bool = True,
+              session_hook: Callable[[Session], None] | None = None) -> dict:
+    """Run every grid cell; returns a comparison dict:
+
+    ``{"grid": ..., "cells": {key: {"overrides", "spec", "acc",
+    "acc_best", "metrics", "cost"}}, "ranking": [...]}``
+
+    ``session_hook`` (if given) is called with each constructed session
+    before it runs — the place to attach callbacks or checkpointing.
+    """
+    cells = {}
+    for overrides, spec in expand_grid(base, grid):
+        key = _cell_key(overrides)
+        if verbose:
+            log(f"sweep cell {key}", rounds=spec.rounds)
+        sess = Session.from_spec(spec)
+        if session_hook is not None:
+            session_hook(sess)
+        sess.run()
+        cells[key] = {
+            "overrides": dict(overrides),
+            "spec": spec.to_dict(),
+            "acc": sess.metrics.last("test_acc"),
+            "acc_best": sess.metrics.best("test_acc"),
+            "metrics": sess.metrics.history,
+            "cost": sess.cost_report(),
+        }
+    ranking = sorted(cells, key=lambda k: -cells[k]["acc"])
+    return {"grid": {k: list(v) for k, v in grid.items()},
+            "base": base.to_dict(), "cells": cells, "ranking": ranking}
+
+
+def format_table(result: dict) -> str:
+    """Table-I-style text comparison: one row per cell, sorted by final
+    accuracy, with the compute/upload savings next to it."""
+    rows = [f"{'cell':<36}{'acc':>8}{'best':>8}"
+            f"{'compute saved':>15}{'upload MB':>11}"]
+    for key in result["ranking"]:
+        c = result["cells"][key]
+        rows.append(f"{key:<36}{c['acc']:>8.3f}{c['acc_best']:>8.3f}"
+                    f"{c['cost']['compute_saved_frac']:>14.1%}"
+                    f"{c['cost']['upload_bytes'] / 1e6:>11.1f}")
+    return "\n".join(rows)

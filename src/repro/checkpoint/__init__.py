@@ -1,1 +1,8 @@
-from repro.checkpoint.store import save_pytree, load_pytree, CheckpointManager  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointManager,
+    FED_STATE_KEYS,
+    load_fed_state,
+    load_pytree,
+    save_fed_state,
+    save_pytree,
+)

@@ -20,8 +20,22 @@ import numpy as np
 PyTree = Any
 _SEP = "/"
 
+#: the full federated round state (see ``repro.core.rounds.init_fed_state``)
+#: — everything a bit-identical resume needs. ``params`` alone is NOT
+#: enough: the stored Δ, stale local models, RNG key and round counter all
+#: feed the next round's transition.
+FED_STATE_KEYS = ("params", "deltas", "prev_local", "trained_ever",
+                  "round", "key")
 
-def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+
+def _is_typed_key(leaf) -> bool:
+    try:
+        return jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)
+    except (AttributeError, TypeError):
+        return False
+
+
+def _flatten(tree: PyTree) -> tuple[dict[str, np.ndarray], dict]:
     flat = {}
 
     def _name(entry) -> str:
@@ -34,7 +48,11 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     dtypes = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_name(p) for p in path)
-        arr = jnp.asarray(leaf)
+        if _is_typed_key(leaf):              # typed PRNG key: store raw
+            dtypes[key] = f"prngkey:{jax.random.key_impl(leaf)}"
+            arr = jax.random.key_data(leaf)
+        else:
+            arr = jnp.asarray(leaf)
         if arr.dtype == jnp.bfloat16:        # numpy has no bf16: store as
             dtypes[key] = "bfloat16"         # f32 (exact) + dtype tag
             arr = arr.astype(jnp.float32)
@@ -65,6 +83,16 @@ def load_pytree(path: str, like: PyTree | None = None
         meta = json.loads(bytes(z["__meta__"]).decode())
         flat = {k: z[k] for k in z.files if k != "__meta__"}
     dtypes = meta.get("dtypes", {})
+
+    def _revive(key: str, arr: np.ndarray):
+        tag = dtypes.get(key, "")
+        if tag == "bfloat16":
+            return jnp.asarray(arr).astype(jnp.bfloat16)
+        if tag.startswith("prngkey:"):
+            return jax.random.wrap_key_data(
+                jnp.asarray(arr), impl=tag.split(":", 1)[1])
+        return jnp.asarray(arr)
+
     if like is None:
         # rebuild nested dicts from '/'-paths
         out: dict = {}
@@ -73,10 +101,7 @@ def load_pytree(path: str, like: PyTree | None = None
             parts = k.split(_SEP)
             for p in parts[:-1]:
                 node = node.setdefault(p, {})
-            arr = jnp.asarray(v)
-            if dtypes.get(k) == "bfloat16":
-                arr = arr.astype(jnp.bfloat16)
-            node[parts[-1]] = arr
+            node[parts[-1]] = _revive(k, v)
         return out, meta["extra"]
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
 
@@ -93,12 +118,42 @@ def load_pytree(path: str, like: PyTree | None = None
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
+        if dtypes.get(key, "").startswith("prngkey:"):
+            leaves.append(_revive(key, arr))
+            continue
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {key!r}: ckpt {arr.shape} vs {leaf.shape}")
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
+
+
+def save_fed_state(path: str, state: PyTree,
+                   extra: dict | None = None) -> None:
+    """Checkpoint the *full* federated state (not just params).
+
+    Refuses partial states: resuming from params alone silently restarts
+    the Δ history, RNG stream and round counter, which is exactly the
+    "cosmetic resume" bug this helper exists to prevent.
+    """
+    missing = [k for k in FED_STATE_KEYS if k not in state]
+    if missing:
+        raise ValueError(
+            f"federated state is missing {missing}; a resumable checkpoint "
+            f"needs all of {list(FED_STATE_KEYS)} (got {sorted(state)})")
+    save_pytree(path, state, extra=extra)
+
+
+def load_fed_state(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore a full federated state saved by :func:`save_fed_state`;
+    ``like`` is a freshly-initialized state supplying structure/dtypes."""
+    state, extra = load_pytree(path, like=like)
+    missing = [k for k in FED_STATE_KEYS if k not in state]
+    if missing:
+        raise ValueError(f"checkpoint {path!r} lacks federated state "
+                         f"keys {missing}")
+    return state, extra
 
 
 class CheckpointManager:
@@ -115,6 +170,24 @@ class CheckpointManager:
         save_pytree(path, tree, extra={"step": step, **(extra or {})})
         self._gc()
         return path
+
+    def save_fed(self, step: int, state: PyTree,
+                 extra: dict | None = None) -> str:
+        """Step-numbered :func:`save_fed_state` (full resumable state)."""
+        path = self._path(step)
+        save_fed_state(path, state, extra={"step": step, **(extra or {})})
+        self._gc()
+        return path
+
+    def read_extra(self, step: int | None = None) -> dict:
+        """Read a checkpoint's metadata without materializing its arrays —
+        how a resume learns the spec/metrics before rebuilding the state."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with np.load(self._path(step)) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+        return meta["extra"]
 
     def steps(self) -> list[int]:
         out = []

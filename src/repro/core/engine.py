@@ -12,8 +12,9 @@ The engine is three composable layers:
 * :mod:`repro.core.rounds` — round executors: one jitted round, a
   ``lax.scan`` span runner (eval-free spans run as ONE program), and the
   fused Pallas fast path over flat (N, P) params.
-* this module — the host-side driver (:func:`run_federated`), evaluation,
-  Fig.-2 probes and the Appendix-A cost accounting (:func:`cost_report`).
+* this module — the legacy host-side driver (:func:`run_federated`, now a
+  back-compat shim over :class:`repro.api.Session`), Fig.-2 probes and the
+  Appendix-A cost accounting (:func:`cost_report`).
 
 Algorithm variants (Appendix A) are numerically identical by construction;
 ``variant`` ∈ {client, server, mixed} drives the storage/communication cost
@@ -23,8 +24,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.evaluation import evaluate  # noqa: F401  (re-exported)
 from repro.core.rounds import (  # noqa: F401  (re-exported public API)
     FedConfig,
     _local_train,
@@ -34,11 +35,11 @@ from repro.core.rounds import (  # noqa: F401  (re-exported public API)
     make_span_runner,
     span_boundaries,
 )
-from repro.core.schedules import Plan, fednova_local_steps
+from repro.core.schedules import Plan
 from repro.core.strategies import available_strategies, get_strategy
 from repro.data.federated import FederatedData
 from repro.models.simple import Classifier
-from repro.utils.logging import MetricLogger, log
+from repro.utils.logging import MetricLogger
 from repro.utils.pytree import PyTree, tree_add, tree_sub
 
 #: registered strategy names (kept as a module constant for back-compat;
@@ -77,32 +78,19 @@ def make_probe_fn(model: Classifier, data: FederatedData, fed: FedConfig,
     return probe
 
 
-def evaluate(model: Classifier, params, x_test, y_test,
-             batch: int = 512) -> float:
-    n = x_test.shape[0]
-    correct = 0
-    apply = jax.jit(model.apply)
-    for i in range(0, n, batch):
-        logits = apply(params, x_test[i: i + batch])
-        correct += int(jnp.sum(jnp.argmax(logits, -1) == y_test[i: i + batch]))
-    return correct / n
-
-
-def _plan_k_active(data: FederatedData, fed: FedConfig,
-                   plan: Plan) -> jax.Array:
-    if fed.strategy == "fednova":
-        k_active_all = fednova_local_steps(plan.p, fed.local_steps)
-    else:
-        k_active_all = np.full(data.n_clients, fed.local_steps, np.int32)
-    return jnp.asarray(k_active_all)
-
-
 def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
                   plan: Plan, *, x_test, y_test, eval_every: int = 10,
                   probe_client: int | None = None,
                   verbose: bool = False, executor: str = "scan",
                   use_fused: bool = False) -> tuple[PyTree, MetricLogger]:
     """Run the whole federation per ``plan``; returns final state + metrics.
+
+    .. deprecated::
+        ``run_federated`` is now a thin back-compat shim over the
+        experiment API — prefer :class:`repro.api.Session` (stepwise,
+        resumable) and :class:`repro.api.ExperimentSpec` (declarative,
+        serializable). Return values and metric streams are identical
+        (pinned by ``tests/test_api.py``).
 
     ``executor`` selects how eval-free spans execute: ``"scan"`` (default)
     runs each span as one jitted ``lax.scan``; ``"python"`` is the classic
@@ -111,47 +99,19 @@ def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
     ``use_fused`` routes rounds through the fused Pallas kernel (only for
     ``fused_capable`` strategies such as ``cc``).
     """
-    if executor not in ("scan", "python"):
-        raise ValueError(f"unknown executor {executor!r}")
-    rng = jax.random.PRNGKey(fed.seed)
-    state = init_fed_state(rng, model, data.n_clients)
-    k_active = _plan_k_active(data, fed, plan)
-    metrics = MetricLogger()
+    from repro.api.callbacks import ProbeCallback, VerboseLogger
+    from repro.api.session import Session
 
-    if probe_client is not None or executor == "python":
-        round_fn = make_round_fn(model, data, fed, fused=use_fused)
-        probe_fn = (make_probe_fn(model, data, fed, probe_client)
-                    if probe_client is not None else None)
-        for t in range(plan.rounds):
-            sel = jnp.asarray(plan.selection[t])
-            train = jnp.asarray(plan.training[t])
-            if probe_fn is not None and t > 0:
-                pk = jax.random.fold_in(state["key"], 1234)
-                pm = probe_fn(state, pk)
-                metrics.record(t, **{k: float(v) for k, v in pm.items()})
-            state = round_fn(state, sel, train, k_active)
-            if (t + 1) % eval_every == 0 or t == plan.rounds - 1:
-                acc = evaluate(model, state["params"], x_test, y_test)
-                metrics.record(t + 1, test_acc=acc)
-                if verbose:
-                    log(f"round {t + 1}/{plan.rounds}",
-                        strategy=fed.strategy, acc=f"{acc:.4f}")
-        return state, metrics
-
-    run_span = make_span_runner(model, data, fed, fused=use_fused)
-    sel_all = jnp.asarray(plan.selection)
-    train_all = jnp.asarray(plan.training)
-    start = 0
-    for stop in span_boundaries(plan.rounds, eval_every):
-        state = run_span(state, sel_all[start:stop], train_all[start:stop],
-                         k_active)
-        acc = evaluate(model, state["params"], x_test, y_test)
-        metrics.record(stop, test_acc=acc)
-        if verbose:
-            log(f"round {stop}/{plan.rounds}", strategy=fed.strategy,
-                acc=f"{acc:.4f}")
-        start = stop
-    return state, metrics
+    callbacks = []
+    if probe_client is not None:
+        callbacks.append(ProbeCallback(probe_client))
+    if verbose:
+        callbacks.append(VerboseLogger())
+    session = Session(model, data, fed, plan, x_test=x_test, y_test=y_test,
+                      eval_every=eval_every, executor=executor,
+                      use_fused=use_fused, callbacks=callbacks)
+    session.run()
+    return session.state, session.metrics
 
 
 def cost_report(plan: Plan, model_bytes: int, variant: str = "client",

@@ -27,14 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro.api import ExperimentSpec, Session, VerboseLogger
 from repro.checkpoint.store import CheckpointManager
-from repro.core.engine import FedConfig, cost_report, run_federated
-from repro.core.schedules import make_plan
-from repro.data.federated import build_federated
-from repro.data.partition import budget_law, partition_gamma
-from repro.data.synthetic import make_dataset, token_lm_dataset, \
-    train_test_split
-from repro.models.simple import make_classifier
+from repro.data.synthetic import token_lm_dataset
 from repro.models.steps import init_train_state, make_train_step
 from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import warmup_cosine_lr
@@ -86,31 +81,40 @@ def run_centralized(args) -> dict:
     return {"losses": losses}
 
 
+def federated_spec(args) -> ExperimentSpec:
+    """Map the federated CLI flags onto one declarative spec."""
+    return ExperimentSpec(
+        dataset=args.dataset, n_samples=args.n_samples, dim=args.dim,
+        n_classes=args.classes, n_clients=args.clients,
+        partition="gamma", gamma=args.gamma,
+        budget="power", beta=args.beta,
+        model=args.model, width=args.width,
+        strategy=args.strategy, variant=args.variant,
+        local_steps=args.local_steps, batch_size=args.batch, lr=args.lr,
+        schedule=args.schedule, rounds=args.rounds,
+        participation=args.participation, eval_every=args.eval_every,
+        seed=args.seed)
+
+
 def run_federated_mode(args) -> dict:
-    ds = make_dataset(args.dataset, n=args.n_samples, dim=args.dim,
-                      n_classes=args.classes, seed=args.seed)
-    tr, te = train_test_split(ds, seed=args.seed)
-    parts = partition_gamma(tr, args.clients, gamma=args.gamma,
-                            seed=args.seed)
-    fd = build_federated(tr, parts)
-    model = make_classifier(args.model, input_shape=tr.x.shape[1:],
-                            n_classes=args.classes, width=args.width)
-    p = budget_law(args.clients, args.beta)
-    plan = make_plan(args.schedule, p, args.rounds,
-                     participation_ratio=args.participation, seed=args.seed)
-    fed = FedConfig(strategy=args.strategy, local_steps=args.local_steps,
-                    batch_size=args.batch, lr=args.lr, seed=args.seed)
-    state, metrics = run_federated(
-        model, fd, fed, plan, x_test=jnp.asarray(te.x),
-        y_test=jnp.asarray(te.y), eval_every=args.eval_every, verbose=True)
-    from repro.utils.pytree import tree_bytes
-    rep = cost_report(plan, tree_bytes(state["params"]),
-                      variant=args.variant)
+    spec = federated_spec(args)
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir (nowhere to restore "
+                         "from)")
+    session = Session.from_spec(spec, callbacks=[VerboseLogger()],
+                                ckpt_dir=args.ckpt_dir or None)
+    if args.ckpt_dir and args.resume:
+        session.restore()
+        log(f"resumed at round {session.t}/{spec.rounds}")
+    session.run()
+    if args.ckpt_dir:
+        session.save()
+    rep = session.cost_report()
     log("federated done", strategy=args.strategy,
-        acc=f"{metrics.last('test_acc'):.4f}",
+        acc=f"{session.metrics.last('test_acc'):.4f}",
         compute_saved=f"{rep['compute_saved_frac']:.1%}",
         upload_mb=f"{rep['upload_bytes'] / 1e6:.1f}")
-    return {"acc": metrics.last("test_acc"), "cost": rep}
+    return {"acc": session.metrics.last("test_acc"), "cost": rep}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -150,6 +154,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--width", type=int, default=16)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--resume", action="store_true",
+                    help="federated: restore the latest checkpoint in "
+                         "--ckpt-dir before running")
     return ap
 
 

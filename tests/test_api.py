@@ -1,0 +1,317 @@
+"""Experiment API: spec round-tripping, Session/run_federated equivalence,
+bit-identical resume, sweep runner, CLI, and full-state checkpointing.
+
+The acceptance pins of the API redesign live here:
+
+* the ``run_federated`` shim and a Session-driven run produce identical
+  final params and metric streams;
+* a session checkpointed at round t and restored produces the same state
+  trajectory and metrics as an uninterrupted run — bit-identically — for
+  ``cc``, ``fednova`` and ``s2`` under both executors.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Callback, CheckpointCallback, ExperimentSpec,
+                       ProbeCallback, Session, VerboseLogger, expand_grid,
+                       format_table, run_sweep)
+from repro.api.cli import main as cli_main
+from repro.checkpoint.store import (CheckpointManager, FED_STATE_KEYS,
+                                    load_fed_state, save_fed_state)
+from repro.core.engine import run_federated
+from repro.core.rounds import init_fed_state
+
+
+def small_spec(**kw) -> ExperimentSpec:
+    base = dict(dataset="gaussian", n_samples=256, dim=8, n_classes=4,
+                n_clients=4, partition="gamma", gamma=0.5, budget="power",
+                beta=2, model="mlp", width=4, strategy="cc", local_steps=2,
+                batch_size=16, lr=0.1, schedule="adhoc", rounds=8,
+                eval_every=4, seed=0)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def assert_states_equal(a, b, keys=FED_STATE_KEYS):
+    for key in keys:
+        for x, y in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# spec: serialization round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_spec_dict_round_trip():
+    spec = small_spec(strategy="fednova", rounds=11, lr=0.07)
+    back = ExperimentSpec.from_dict(spec.to_dict())
+    assert back == spec
+
+
+def test_spec_json_round_trip_through_file(tmp_path):
+    spec = small_spec(budget="explicit", p=(1.0, 0.5, 0.5, 0.25))
+    path = spec.save(str(tmp_path / "spec.json"))
+    back = ExperimentSpec.load(path)
+    assert back == spec
+    assert back.budgets().tolist() == [1.0, 0.5, 0.5, 0.25]
+
+
+def test_spec_rejects_unknown_fields_and_values():
+    with pytest.raises(ValueError, match="unknown spec fields"):
+        ExperimentSpec.from_dict({"no_such_field": 1})
+    with pytest.raises(ValueError, match="dataset"):
+        small_spec(dataset="cifar10")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        small_spec(strategy="nope")
+    with pytest.raises(ValueError, match="explicit"):
+        small_spec(budget="explicit", p=None)
+
+
+def test_spec_build_is_deterministic():
+    a, b = small_spec().build(), small_spec().build()
+    np.testing.assert_array_equal(np.asarray(a.data.x), np.asarray(b.data.x))
+    np.testing.assert_array_equal(a.plan.training, b.plan.training)
+    assert a.plan.rounds == 8
+
+
+# ---------------------------------------------------------------------------
+# acceptance: run_federated shim ≡ Session
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", ["scan", "python"])
+def test_shim_matches_session(executor):
+    spec = small_spec(executor=executor)
+    sess = Session.from_spec(spec).run()
+    b = spec.build()
+    state, metrics = run_federated(
+        b.model, b.data, b.fed, b.plan, x_test=b.x_test, y_test=b.y_test,
+        eval_every=spec.eval_every, executor=executor)
+    assert metrics.history == sess.metrics.history
+    assert_states_equal(state, sess.state)
+
+
+def test_probe_client_does_not_perturb_trajectory():
+    spec = small_spec(rounds=5, eval_every=2)
+    b = spec.build()
+    kw = dict(x_test=b.x_test, y_test=b.y_test, eval_every=2)
+    s_plain, m_plain = run_federated(b.model, b.data, b.fed, b.plan, **kw)
+    s_probe, m_probe = run_federated(b.model, b.data, b.fed, b.plan,
+                                     probe_client=0, **kw)
+    assert m_probe.history["test_acc"] == m_plain.history["test_acc"]
+    assert_states_equal(s_plain, s_probe)
+    # legacy cadence: probes at rounds 1..T-1, never after the final round
+    assert [s for s, _ in m_probe.history["euclid_s3"]] == [1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: kill-and-resume ≡ uninterrupted, bit-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["cc", "fednova", "s2"])
+@pytest.mark.parametrize("executor", ["scan", "python"])
+def test_resume_matches_uninterrupted(tmp_path, strategy, executor):
+    spec = small_spec(strategy=strategy, executor=executor, rounds=10,
+                      eval_every=3)
+    full = Session.from_spec(spec).run()
+
+    part = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    part.run(4)                       # mid-span interrupt (3 < 4 < 6)
+    part.save()
+    del part
+
+    resumed = Session.restore_from(str(tmp_path))
+    assert resumed.t == 4
+    resumed.run()
+    assert resumed.metrics.history == full.metrics.history
+    assert_states_equal(resumed.state, full.state)
+
+
+def test_resume_restores_metric_history(tmp_path):
+    spec = small_spec(rounds=8, eval_every=2)
+    sess = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    sess.run(6)
+    sess.save()
+    resumed = Session.restore_from(str(tmp_path))
+    # evals at 2, 4, 6 survive the round-trip with exact values
+    assert resumed.metrics.history == sess.metrics.history
+    resumed.run()
+    assert [s for s, _ in resumed.metrics.history["test_acc"]] == [2, 4, 6, 8]
+
+
+def test_step_equals_run(tmp_path):
+    spec = small_spec(rounds=6, eval_every=6)
+    by_run = Session.from_spec(spec).run()
+    by_step = Session.from_spec(spec)
+    while not by_step.done:
+        by_step.step()
+    assert_states_equal(by_run.state, by_step.state)
+    assert by_step.t == 6
+    with pytest.raises(RuntimeError, match="plan exhausted"):
+        by_step.step()
+
+
+def test_run_is_idempotent_after_completion():
+    sess = Session.from_spec(small_spec()).run()
+    n_evals = len(sess.metrics.history["test_acc"])
+    sess.run()                        # no-op: no duplicate eval records
+    assert len(sess.metrics.history["test_acc"]) == n_evals
+
+
+# ---------------------------------------------------------------------------
+# callbacks
+# ---------------------------------------------------------------------------
+
+
+class _Recorder(Callback):
+    def __init__(self, sync_every=None):
+        self.sync_every = sync_every
+        self.round_ends, self.evals, self.ckpts = [], [], []
+
+    def on_round_end(self, session, t):
+        self.round_ends.append(t)
+
+    def on_eval(self, session, t, acc):
+        self.evals.append(t)
+
+    def on_checkpoint(self, session, t, path):
+        self.ckpts.append((t, path))
+
+
+def test_callback_sync_every_splits_spans_without_changing_evals():
+    rec = _Recorder(sync_every=5)
+    spec = small_spec(rounds=12, eval_every=4)
+    sess = Session.from_spec(spec, callbacks=[rec]).run()
+    assert rec.round_ends == [4, 5, 8, 10, 12]       # eval ∪ sync points
+    assert rec.evals == [4, 8, 12]                   # cadence unchanged
+    assert [s for s, _ in sess.metrics.history["test_acc"]] == [4, 8, 12]
+
+
+def test_checkpoint_callback_writes_full_state(tmp_path):
+    rec = _Recorder()
+    spec = small_spec(rounds=8, eval_every=4)
+    sess = Session.from_spec(
+        spec, callbacks=[CheckpointCallback(3), rec],
+        ckpt_dir=str(tmp_path), keep=10)
+    sess.run()
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.steps() == [3, 6]
+    assert [t for t, _ in rec.ckpts] == [3, 6]
+    like = init_fed_state(jax.random.PRNGKey(spec.seed),
+                          spec.build().model, spec.n_clients)
+    state, extra = load_fed_state(os.path.join(str(tmp_path),
+                                               "ckpt_00000006.npz"), like)
+    assert int(state["round"]) == 6
+    assert extra["spec"]["strategy"] == "cc"
+
+
+def test_verbose_logger_runs(capsys):
+    Session.from_spec(small_spec(rounds=4, eval_every=2),
+                      callbacks=[VerboseLogger()]).run()
+    err = capsys.readouterr().err
+    assert "round 2/4" in err and "round 4/4" in err
+
+
+# ---------------------------------------------------------------------------
+# full-state checkpoint helpers
+# ---------------------------------------------------------------------------
+
+
+def test_save_fed_state_rejects_params_only(tmp_path):
+    with pytest.raises(ValueError, match="missing"):
+        save_fed_state(str(tmp_path / "x.npz"),
+                       {"params": {"w": jnp.ones((2,))}})
+
+
+def test_manager_read_extra(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"w": jnp.ones((2,))}, extra={"note": "hi"})
+    assert mgr.read_extra()["note"] == "hi"
+    assert mgr.read_extra()["step"] == 3
+
+
+# ---------------------------------------------------------------------------
+# sweep runner
+# ---------------------------------------------------------------------------
+
+
+def test_expand_grid_cartesian_product():
+    cells = expand_grid(small_spec(), {"strategy": ["cc", "s2"],
+                                       "beta": [1, 2]})
+    assert len(cells) == 4
+    assert cells[0][0] == {"strategy": "cc", "beta": 1}
+    assert {c[1].strategy for c in cells} == {"cc", "s2"}
+    assert expand_grid(small_spec(), {})[0][0] == {}
+
+
+def test_run_sweep_emits_table_and_costs():
+    result = run_sweep(small_spec(rounds=4, eval_every=4),
+                       {"strategy": ["cc", "s1"]}, verbose=False)
+    assert set(result["cells"]) == {"strategy=cc", "strategy=s1"}
+    for cell in result["cells"].values():
+        assert 0.0 <= cell["acc"] <= 1.0
+        assert "compute_saved_frac" in cell["cost"]
+    assert result["ranking"][0] in result["cells"]
+    table = format_table(result)
+    assert "strategy=cc" in table and "compute saved" in table
+
+
+def test_sweep_cell_matches_direct_session():
+    spec = small_spec(rounds=4, eval_every=4)
+    result = run_sweep(spec, {"strategy": ["cc"]}, verbose=False)
+    direct = Session.from_spec(spec).run()
+    assert result["cells"]["strategy=cc"]["acc"] == \
+        direct.metrics.last("test_acc")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_init_run_resume(tmp_path, capsys):
+    spec_path = str(tmp_path / "spec.json")
+    ckpt_dir = str(tmp_path / "ckpt")
+    assert cli_main(["init", spec_path, "--set", "rounds=4",
+                     "--set", "eval_every=2", "--set", "n_samples=256",
+                     "--set", "dim=8", "--set", "n_classes=4",
+                     "--set", "n_clients=4", "--set", "width=4",
+                     "--set", "local_steps=2"]) == 0
+    spec = ExperimentSpec.load(spec_path)
+    assert spec.rounds == 4 and spec.eval_every == 2
+
+    out_path = str(tmp_path / "run.json")
+    assert cli_main(["run", spec_path, "--ckpt-dir", ckpt_dir,
+                     "--out", out_path, "--quiet"]) == 0
+    summary = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert summary["rounds_done"] == 4
+    with open(out_path) as f:
+        dumped = json.load(f)
+    assert dumped["spec"]["rounds"] == 4
+    assert [s for s, _ in dumped["metrics"]["test_acc"]] == [2, 4]
+
+    assert cli_main(["resume", ckpt_dir, "--quiet"]) == 0
+    summary = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert summary["rounds_done"] == 4      # plan already finished
+
+
+def test_cli_sweep(tmp_path, capsys):
+    spec_path = str(tmp_path / "spec.json")
+    cli_main(["init", spec_path, "--set", "rounds=2",
+              "--set", "eval_every=2", "--set", "n_samples=256",
+              "--set", "dim=8", "--set", "n_classes=4",
+              "--set", "n_clients=4", "--set", "width=4",
+              "--set", "local_steps=2"])
+    capsys.readouterr()
+    assert cli_main(["sweep", spec_path, "--grid", "strategy=cc,s1",
+                     "--quiet"]) == 0
+    out = capsys.readouterr().out
+    assert "strategy=cc" in out and "strategy=s1" in out
