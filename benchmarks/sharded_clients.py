@@ -1,0 +1,131 @@
+"""Sharded large-cohort executor — clients-per-second vs cohort size.
+
+CC-FedAvg targets numerous IoT devices: N clients far exceeding the
+devices available, with only an M-client cohort participating per round.
+The sharded executor gathers each round's cohort, ``shard_map``s it over
+the ``clients`` mesh axis and scatters updated history back; this
+benchmark sweeps the cohort size and reports client-rounds per second,
+plus the full-federation scan executor as the single-device reference.
+
+Emits machine-readable results to ``BENCH_sharded_clients.json``
+(``--json`` to change the path, empty string to disable). CI smoke-runs it
+on a 4-virtual-device host mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``); on real
+multi-device hosts the mesh picks up every visible device.
+
+    PYTHONPATH=src python benchmarks/sharded_clients.py [--clients 64]
+        [--cohorts 8,16,32,64] [--rounds 30] [--reps 3]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_sharded_span_runner, make_span_runner)
+from repro.core.schedules import make_plan
+from repro.data.federated import CohortSampler, build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.launch.mesh import best_client_shards
+from repro.models.simple import make_classifier
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--cohorts", default="8,16,32,64",
+                    help="comma-separated cohort sizes to sweep")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_sharded_clients.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+    cohorts = [int(c) for c in args.cohorts.split(",") if c]
+
+    n = args.clients
+    ds = make_dataset("teacher", n=4096, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, n, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    plan = make_plan("adhoc", budget_law(n, beta=4), args.rounds, seed=0)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=32, lr=0.1)
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+
+    n_dev = len(jax.devices())
+    print(f"clients={n} rounds={args.rounds} devices={n_dev} "
+          f"(best of {args.reps})")
+
+    # full-federation scan executor: the single-program reference
+    runner = make_span_runner(model, fd, fed)
+    s0 = init_fed_state(jax.random.PRNGKey(0), model, n)
+    _block(runner(s0, sel, train, k))
+    t_scan = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, n)
+        t0 = time.perf_counter()
+        _block(runner(state, sel, train, k))
+        t_scan.append(time.perf_counter() - t0)
+    scan_s = min(t_scan)
+    scan_cps = n * args.rounds / scan_s
+    print(f"scan (full federation): {scan_s * 1e3:8.1f} ms "
+          f"({scan_cps:9.1f} client-rounds/s)")
+
+    rows = []
+    for m in cohorts:
+        if m > n:
+            print(f"cohort {m} > clients {n}, skipping")
+            continue
+        shards = best_client_shards(m)
+        sharded = make_sharded_span_runner(model, fd, fed, cohort_size=m)
+        idx = jnp.asarray(CohortSampler(n, m, seed=0).indices(args.rounds))
+        s0 = init_fed_state(jax.random.PRNGKey(0), model, n)
+        _block(sharded(s0, sel, train, k, idx))
+        times = []
+        for _ in range(args.reps):
+            state = init_fed_state(jax.random.PRNGKey(0), model, n)
+            t0 = time.perf_counter()
+            _block(sharded(state, sel, train, k, idx))
+            times.append(time.perf_counter() - t0)
+        best = min(times)
+        cps = m * args.rounds / best
+        rows.append({"cohort_size": m, "shards": shards,
+                     "total_s": best, "ms_per_round": best / args.rounds * 1e3,
+                     "clients_per_second": cps})
+        print(f"sharded cohort={m:5d} ({shards} shard{'s'[:shards > 1]}): "
+              f"{best * 1e3:8.1f} ms ({cps:9.1f} client-rounds/s)")
+        print(f"csv,sharded_clients,{m},{best * 1e6:.0f}")
+
+    if args.json:
+        payload = {
+            "bench": "sharded_clients",
+            "config": {"clients": n, "rounds": args.rounds,
+                       "local_steps": args.local_steps, "reps": args.reps,
+                       "devices": n_dev},
+            "scan_full_s": scan_s,
+            "scan_full_clients_per_second": scan_cps,
+            "cohorts": rows,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

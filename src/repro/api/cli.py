@@ -17,6 +17,11 @@ Examples:
     python -m repro run /tmp/exp.json --ckpt-dir /tmp/ckpt --save-every 10
     python -m repro resume /tmp/ckpt
     python -m repro sweep /tmp/exp.json --grid strategy=cc,s2,fedavg
+
+Executor selection rides the spec fields: ``--set executor=sharded --set
+cohort_size=8`` runs each round's sampled cohort shard_map'ed over the
+client mesh (all visible devices), ``--set use_fused=true`` takes the
+fused Pallas path.
 """
 from __future__ import annotations
 

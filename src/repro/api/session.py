@@ -2,10 +2,11 @@
 
 A :class:`Session` owns one federated run: the materialized model/data/
 plan, the full round state, the metric history and the eval cadence. It
-wraps the executors of :mod:`repro.core.rounds` — per-round jit or
+wraps the executors of :mod:`repro.core.rounds` — per-round jit,
 ``lax.scan`` spans (``use_fused=True`` routes rounds through the Pallas
-kernel) — behind ``run(n_rounds)`` / ``step()`` / ``eval()`` / ``save()``
-/ ``restore()``.
+kernel), or ``executor="sharded"`` spans that ``shard_map`` each round's
+sampled cohort over the client mesh — behind ``run(n_rounds)`` /
+``step()`` / ``eval()`` / ``save()`` / ``restore()``.
 
 Determinism contract (pinned by ``tests/test_api.py``):
 
@@ -28,9 +29,10 @@ from repro.api.callbacks import Callback
 from repro.checkpoint.store import CheckpointManager
 from repro.core.evaluation import evaluate
 from repro.core.rounds import (FedConfig, init_fed_state, make_round_fn,
-                               make_span_runner, span_boundaries)
+                               make_sharded_span_runner, make_span_runner,
+                               span_boundaries)
 from repro.core.schedules import Plan, fednova_local_steps
-from repro.data.federated import FederatedData
+from repro.data.federated import CohortSampler, FederatedData
 from repro.models.simple import Classifier
 from repro.utils.logging import MetricLogger
 from repro.utils.pytree import PyTree, tree_bytes
@@ -57,8 +59,13 @@ class Session:
                  callbacks: Iterable[Callback] = (),
                  ckpt_dir: str | None = None, keep: int = 3,
                  spec=None):
-        if executor not in ("scan", "python"):
+        if executor not in ("scan", "python", "sharded"):
             raise ValueError(f"unknown executor {executor!r}")
+        if executor == "sharded" and use_fused:
+            raise ValueError("use_fused is not supported by the sharded "
+                             "executor; pick one fast path")
+        if eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {eval_every}")
         self.model = model
         self.data = data
         self.fed = fed
@@ -77,6 +84,14 @@ class Session:
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
         self._train = jnp.asarray(plan.training)
+        self._cohort = None
+        if executor == "sharded":
+            # absolute-round-keyed cohorts: resumed sessions sample the
+            # same participants, mirroring the plan-mask contract
+            sampler = CohortSampler(data.n_clients,
+                                    fed.cohort_size or data.n_clients,
+                                    seed=fed.seed)
+            self._cohort = jnp.asarray(sampler.indices(plan.rounds))
         self._round_fn = None
         self._span_runner = None
         self._mgr = (CheckpointManager(ckpt_dir, keep=keep)
@@ -136,21 +151,44 @@ class Session:
 
     def _get_span_runner(self):
         if self._span_runner is None:
-            self._span_runner = make_span_runner(
-                self.model, self.data, self.fed, fused=self.use_fused)
+            if self.executor == "sharded":
+                self._span_runner = make_sharded_span_runner(
+                    self.model, self.data, self.fed)
+            else:
+                self._span_runner = make_span_runner(
+                    self.model, self.data, self.fed, fused=self.use_fused)
         return self._span_runner
 
+    def _advance_span(self, stop: int) -> None:
+        """Run rounds ``self._t .. stop`` as one span with the configured
+        span runner (the sharded runner additionally takes its cohort
+        table slice)."""
+        t, run_span = self._t, self._get_span_runner()
+        if self.executor == "sharded":
+            self.state = run_span(self.state, self._sel[t:stop],
+                                  self._train[t:stop], self.k_active,
+                                  self._cohort[t:stop])
+        else:
+            self.state = run_span(self.state, self._sel[t:stop],
+                                  self._train[t:stop], self.k_active)
+        self._t = stop
+
     def step(self) -> PyTree:
-        """Advance exactly one round (per-round executor) and fire
-        ``on_round_end``. Evaluation stays on the absolute cadence and is
-        driven by :meth:`run`; a bare ``step()`` never records metrics."""
+        """Advance exactly one round (per-round executor; the sharded
+        executor runs a one-round span so cohort sampling still applies)
+        and fire ``on_round_end``. Evaluation stays on the absolute cadence
+        and is driven by :meth:`run`; a bare ``step()`` never records
+        metrics."""
         t = self._t
         if t >= self.plan.rounds:
             raise RuntimeError(
                 f"plan exhausted: {t}/{self.plan.rounds} rounds done")
-        self.state = self._get_round_fn()(
-            self.state, self._sel[t], self._train[t], self.k_active)
-        self._t = t + 1
+        if self.executor == "sharded":
+            self._advance_span(t + 1)
+        else:
+            self.state = self._get_round_fn()(
+                self.state, self._sel[t], self._train[t], self.k_active)
+            self._t = t + 1
         for cb in self.callbacks:
             cb.on_round_end(self, self._t)
         return self.state
@@ -175,8 +213,11 @@ class Session:
                   else min(total, self._t + n_rounds))
         if target <= self._t:               # nothing to do; never re-fires
             return self                     # hooks or re-records an eval
+        per_round_cbs = any(cb.needs_python_loop for cb in self.callbacks)
+        # the sharded executor has no python-loop fallback (it would drop
+        # cohort sampling); per-round callbacks split its spans instead
         needs_python = (self.executor == "python"
-                        or any(cb.needs_python_loop for cb in self.callbacks))
+                        or (per_round_cbs and self.executor != "sharded"))
         if needs_python:
             while self._t < target:
                 self.step()
@@ -189,17 +230,14 @@ class Session:
         for cb in self.callbacks:
             if cb.sync_every:
                 stops.update(range(cb.sync_every, total + 1, cb.sync_every))
+        if per_round_cbs:                   # sharded + per-round callbacks
+            stops.update(range(self._t + 1, target + 1))
         stops = sorted(s for s in stops if self._t < s <= target)
         if not stops or stops[-1] != target:
             stops.append(target)
-        run_span = self._get_span_runner()
         for stop in stops:
             if stop > self._t:
-                self.state = run_span(self.state,
-                                      self._sel[self._t:stop],
-                                      self._train[self._t:stop],
-                                      self.k_active)
-                self._t = stop
+                self._advance_span(stop)
             for cb in self.callbacks:
                 cb.on_round_end(self, self._t)
             if self._t in eval_stops:

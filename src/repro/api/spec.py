@@ -38,7 +38,7 @@ _PARTITIONS = ("gamma", "classes")
 _BUDGETS = ("power", "two_group", "uniform", "explicit")
 _MODELS = ("mlp", "cnn", "resnet18")
 _SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
-_EXECUTORS = ("scan", "python")
+_EXECUTORS = ("scan", "python", "sharded")
 
 
 @dataclass(frozen=True)
@@ -98,8 +98,9 @@ class ExperimentSpec:
 
     # ---- execution ------------------------------------------------------
     eval_every: int = 20
-    executor: str = "scan"
+    executor: str = "scan"         # scan | python | sharded
     use_fused: bool = False
+    cohort_size: int | None = None  # sharded executor: participants/round
     seed: int = 0
 
     def __post_init__(self):
@@ -121,6 +122,18 @@ class ExperimentSpec:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
+        if self.cohort_size is not None:
+            if self.executor != "sharded":
+                raise ValueError("cohort_size requires executor='sharded' "
+                                 "(only the sharded executor samples "
+                                 "cohorts)")
+            if not 1 <= self.cohort_size <= self.n_clients:
+                raise ValueError(
+                    f"cohort_size must be in [1, {self.n_clients}], "
+                    f"got {self.cohort_size}")
+        if self.executor == "sharded" and self.use_fused:
+            raise ValueError("use_fused is not supported by the sharded "
+                             "executor; pick one fast path")
         self.fed_config()               # validates strategy name eagerly
 
     # ---- serialization --------------------------------------------------
@@ -173,7 +186,8 @@ class ExperimentSpec:
         return FedConfig(strategy=self.strategy, variant=self.variant,
                          local_steps=self.local_steps,
                          batch_size=self.batch_size, lr=self.lr,
-                         tau=self.tau, seed=self.seed)
+                         tau=self.tau, seed=self.seed,
+                         cohort_size=self.cohort_size)
 
     def budgets(self) -> np.ndarray:
         if self.budget == "power":

@@ -21,6 +21,7 @@ from repro.core.engine import (  # noqa: F401
 )
 from repro.core.rounds import (  # noqa: F401
     make_round_body,
+    make_sharded_span_runner,
     make_span_runner,
 )
 from repro.core.strategies import (  # noqa: F401

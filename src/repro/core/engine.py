@@ -32,6 +32,7 @@ from repro.core.rounds import (  # noqa: F401  (re-exported public API)
     init_fed_state,
     make_round_body,
     make_round_fn,
+    make_sharded_span_runner,
     make_span_runner,
     span_boundaries,
 )
@@ -94,10 +95,11 @@ def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
 
     ``executor`` selects how eval-free spans execute: ``"scan"`` (default)
     runs each span as one jitted ``lax.scan``; ``"python"`` is the classic
-    one-dispatch-per-round loop (the two are numerically identical — see
-    ``tests/test_rounds.py``). Per-round probing forces the python loop.
-    ``use_fused`` routes rounds through the fused Pallas kernel (only for
-    ``fused_capable`` strategies such as ``cc``).
+    one-dispatch-per-round loop; ``"sharded"`` shard_maps each round's
+    cohort over the client mesh (all numerically interchangeable — see
+    ``tests/test_executor_matrix.py``). Per-round probing forces the
+    python loop. ``use_fused`` routes rounds through the fused Pallas
+    kernel (only for ``fused_capable`` strategies such as ``cc``).
     """
     from repro.api.callbacks import ProbeCallback, VerboseLogger
     from repro.api.session import Session

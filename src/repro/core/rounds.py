@@ -1,7 +1,8 @@
 """Round executors for the vectorized-client federation.
 
-Three ways to run the same round semantics, all built from one traceable
-round body so they are numerically interchangeable:
+Four ways to run the same round semantics, all built from one traceable
+cohort-round core (:func:`_cohort_round`) so they are numerically
+interchangeable:
 
 * :func:`make_round_fn` — one jitted round (the classic per-round API);
 * :func:`make_span_runner` — ``jax.lax.scan`` over a stacked (C, N) chunk
@@ -9,6 +10,12 @@ round body so they are numerically interchangeable:
   program instead of C separate dispatches (the dominant cost at small
   model sizes is host→device round-trips, not FLOPs — see
   ``benchmarks/round_loop.py``);
+* :func:`make_sharded_span_runner` — the scan span with every round's
+  cohort ``shard_map``'ed over a ``("clients",)`` mesh: each round gathers
+  only the sampled participants' history rows
+  (:class:`repro.data.federated.CohortSampler`), splits them across
+  devices, reduces the aggregation with ``lax.psum`` and scatters the
+  updated rows back — N ≫ devices cross-device cohorts;
 * ``fused=True`` — route the train-or-estimate + masked-mean + global
   update through the single-HBM-pass Pallas kernel
   (:func:`repro.kernels.ops.cc_delta_update`) on flat (N, P) parameters;
@@ -42,6 +49,9 @@ from repro.utils.pytree import (
 
 _FUSED_PAD = 512               # flat params padded to a tile-friendly multiple
 
+#: mesh axis name the sharded executor splits the client dimension over
+CLIENT_AXIS = "clients"
+
 
 @dataclass(frozen=True)
 class FedConfig:
@@ -52,9 +62,15 @@ class FedConfig:
     lr: float = 0.05
     tau: int = 100                 # CC-FedAvg(c) switch round
     seed: int = 0
+    #: participants sampled per round by the sharded executor
+    #: (None = the full federation every round)
+    cohort_size: int | None = None
 
     def __post_init__(self):
         get_strategy(self.strategy)    # raises ValueError on unknown names
+        if self.cohort_size is not None and self.cohort_size < 1:
+            raise ValueError(
+                f"cohort_size must be >= 1, got {self.cohort_size}")
 
     def resolve(self) -> Strategy:
         return get_strategy(self.strategy)
@@ -93,19 +109,74 @@ def init_fed_state(rng, model: Classifier, n_clients: int) -> PyTree:
     }
 
 
-def _train_all_clients(model: Classifier, data: FederatedData,
-                       fed: FedConfig, state: PyTree, k_active):
-    """Split the round key and vmap local training over every client."""
-    n = data.n_clients
-    key, *keys = jax.random.split(state["key"], n + 1)
-    keys = jnp.stack(keys)
-    broadcast = tree_broadcast_clients(state["params"], n)
+def _round_keys(key, n: int):
+    """Split the round key into (next round key, per-client keys).
+
+    Keys are always derived for the FULL federation (``n`` = total clients)
+    and cohort members take ``keys[idx]`` — client i sees the same training
+    randomness whether it runs in a full round or a sampled cohort, which
+    is what makes the sharded executor differential-testable against the
+    others.
+    """
+    ks = jax.random.split(key, n + 1)
+    return ks[0], ks[1:]
+
+
+def _train_cohort(model: Classifier, fed: FedConfig, params, keys,
+                  cx, cy, sizes, k_active):
+    """Broadcast the global model and vmap local training over a cohort
+    (full federation or gathered participants)."""
+    broadcast = tree_broadcast_clients(params, sizes.shape[0])
     local = jax.vmap(
-        lambda p, k, cx, cy, sz, ka: _local_train(
-            model, p, k, cx, cy, sz, fed.local_steps, ka,
+        lambda p, k, x, y, sz, ka: _local_train(
+            model, p, k, x, y, sz, fed.local_steps, ka,
             fed.batch_size, fed.lr)
-    )(broadcast, keys, data.x, data.y, data.sizes, k_active)
-    return key, broadcast, local
+    )(broadcast, keys, cx, cy, sizes, k_active)
+    return broadcast, local
+
+
+def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
+                  params, rnd, hist, cx, cy, sizes, keys,
+                  sel_mask, train_mask, k_active, axis_name=None):
+    """One round over a cohort view of the federation.
+
+    ``hist`` holds the cohort's per-client rows (``deltas`` / ``prev_local``
+    / ``trained_ever``); every executor wraps this one traceable core. With
+    ``axis_name`` set the cohort axis is ``shard_map``'ed and aggregation
+    reduces across shards (the strategies' ``aggregate`` hooks psum), so
+    the returned global params are replicated.
+    Returns ``(new_params, new_hist)``.
+    """
+    broadcast, local = _train_cohort(model, fed, params, keys, cx, cy,
+                                     sizes, k_active)
+    trained_delta = tree_sub(local, broadcast)
+
+    # ---- estimation for skipped clients --------------------------
+    stale_delta = tree_sub(hist["prev_local"], broadcast)
+    stale_delta = masked_select(hist["trained_ever"], stale_delta,
+                                tree_zeros_like(stale_delta))
+    ctx = RoundCtx(sel_mask=sel_mask, train_mask=train_mask,
+                   k_active=k_active, round=rnd, tau=fed.tau,
+                   stale_delta=stale_delta, trained_delta=trained_delta,
+                   axis_name=axis_name)
+    est = strategy.estimate(hist, ctx)
+    delta_i = masked_select(train_mask, trained_delta, est)
+
+    # ---- aggregation (Eq. 3 over Δ) -------------------------------
+    aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+    delta = strategy.aggregate(delta_i, aggf, ctx)
+    new_params = tree_add(params, delta)
+
+    # ---- history updates ------------------------------------------
+    upd = sel_mask & train_mask
+    deltas, prev_local = strategy.update_history(hist, ctx, trained_delta,
+                                                 local, est)
+    new_hist = {
+        "deltas": deltas,
+        "prev_local": prev_local,
+        "trained_ever": hist["trained_ever"] | upd,
+    }
+    return new_params, new_hist
 
 
 def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
@@ -117,34 +188,14 @@ def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
         return _make_fused_round_body(model, data, fed, strategy)
 
     def round_body(state, sel_mask, train_mask, k_active):
-        key, broadcast, local = _train_all_clients(model, data, fed,
-                                                   state, k_active)
-        trained_delta = tree_sub(local, broadcast)
-
-        # ---- estimation for skipped clients --------------------------
-        stale_delta = tree_sub(state["prev_local"], broadcast)
-        stale_delta = masked_select(state["trained_ever"], stale_delta,
-                                    tree_zeros_like(stale_delta))
-        ctx = RoundCtx(sel_mask=sel_mask, train_mask=train_mask,
-                       k_active=k_active, round=state["round"], tau=fed.tau,
-                       stale_delta=stale_delta, trained_delta=trained_delta)
-        est = strategy.estimate(state, ctx)
-        delta_i = masked_select(train_mask, trained_delta, est)
-
-        # ---- aggregation (Eq. 3 over Δ) -------------------------------
-        aggf = strategy.agg_mask(ctx).astype(jnp.float32)
-        delta = strategy.aggregate(delta_i, aggf, ctx)
-        new_params = tree_add(state["params"], delta)
-
-        # ---- history updates ------------------------------------------
-        upd = sel_mask & train_mask
-        deltas, prev_local = strategy.update_history(
-            state, ctx, trained_delta, local, est)
+        key, keys = _round_keys(state["key"], data.n_clients)
+        new_params, new_hist = _cohort_round(
+            model, fed, strategy, state["params"], state["round"], state,
+            data.x, data.y, data.sizes, keys, sel_mask, train_mask,
+            k_active)
         return {
             "params": new_params,
-            "deltas": deltas,
-            "prev_local": prev_local,
-            "trained_ever": state["trained_ever"] | upd,
+            **new_hist,
             "round": state["round"] + 1,
             "key": key,
         }
@@ -165,7 +216,9 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
             "replays stored Δ verbatim); use the tree-ops path")
 
     def round_body(state, sel_mask, train_mask, k_active):
-        key, _, local = _train_all_clients(model, data, fed, state, k_active)
+        key, keys = _round_keys(state["key"], data.n_clients)
+        _, local = _train_cohort(model, fed, state["params"], keys,
+                                 data.x, data.y, data.sizes, k_active)
         flat_local, unravel_clients = tree_ravel_clients(local)
         flat_deltas, _ = tree_ravel_clients(state["deltas"])
         flat_global, unravel = tree_ravel(state["params"])
@@ -221,10 +274,100 @@ def make_span_runner(model: Classifier, data: FederatedData, fed: FedConfig,
     return run_span
 
 
+def make_sharded_span_runner(model: Classifier, data: FederatedData,
+                             fed: FedConfig, *, mesh=None,
+                             cohort_size: int | None = None):
+    """Sharded executor: ``run_span(state, sel_chunk, train_chunk, k_active,
+    cohort_idx)`` advances the federation over a (C, N) chunk of plan masks
+    with each round's cohort ``shard_map``'ed over the ``clients`` mesh axis.
+
+    ``cohort_idx`` is a (C, M) table of participant ids (see
+    :class:`repro.data.federated.CohortSampler`; M = ``cohort_size``,
+    defaulting to ``fed.cohort_size`` or the full federation). Per round the
+    scan body gathers only the cohort's history rows and data shards
+    (``strategy.gather_history``), runs the cohort round split across the
+    mesh — aggregation reduces with ``lax.psum``, so the new global params
+    come back replicated — and scatters the updated rows into the full-N
+    state (``strategy.scatter_history``). Non-members are untouched, exactly
+    as if their ``sel``/``train`` masks were False.
+
+    ``mesh`` defaults to a 1-D client mesh over the largest device count
+    that divides the cohort (:func:`repro.launch.mesh.make_client_mesh`);
+    an explicit mesh must divide it.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro.launch.mesh import best_client_shards, make_client_mesh
+    from repro.sharding.api import ShardingContext
+
+    strategy = fed.resolve()
+    n = data.n_clients
+    m = cohort_size if cohort_size is not None else (fed.cohort_size or n)
+    if not 1 <= m <= n:
+        raise ValueError(f"cohort_size must be in [1, {n}], got {m}")
+    if mesh is None:
+        mesh = make_client_mesh(best_client_shards(m))
+    if CLIENT_AXIS not in mesh.axis_names:
+        raise ValueError(f"mesh must carry a {CLIENT_AXIS!r} axis, got "
+                         f"{mesh.axis_names}")
+    shards = dict(zip(mesh.axis_names, mesh.devices.shape))[CLIENT_AXIS]
+    if m % shards:
+        raise ValueError(
+            f"cohort size {m} must divide evenly over the {shards}-way "
+            f"{CLIENT_AXIS!r} mesh axis")
+
+    # the logical-axis rules of sharding/api map the cohort dim to the mesh
+    ctx_sh = ShardingContext(mesh=mesh, rules={CLIENT_AXIS: [CLIENT_AXIS]})
+    cspec = ctx_sh.spec((CLIENT_AXIS,))       # shard leading (cohort) dim
+    rspec = PartitionSpec()                   # replicated
+
+    def shard_body(params, rnd, hist, keys, cx, cy, sizes, sel, train, ka):
+        return _cohort_round(model, fed, strategy, params, rnd, hist,
+                             cx, cy, sizes, keys, sel, train, ka,
+                             axis_name=CLIENT_AXIS)
+
+    cohort_round = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(rspec, rspec, cspec, cspec, cspec, cspec, cspec, cspec,
+                  cspec, cspec),
+        out_specs=(rspec, cspec))
+
+    @jax.jit
+    def run_span(state, sel_chunk, train_chunk, k_active, cohort_idx):
+        def step(st, xs):
+            sel, train, idx = xs
+            key, keys = _round_keys(st["key"], n)
+            take = functools.partial(jnp.take, indices=idx, axis=0)
+            hist = strategy.gather_history(st, idx)
+            new_params, new_hist = cohort_round(
+                st["params"], st["round"], hist, take(keys),
+                take(data.x), take(data.y), take(data.sizes),
+                take(sel), take(train), take(k_active))
+            new_state = strategy.scatter_history(st, idx, new_hist)
+            new_state.update(params=new_params, round=st["round"] + 1,
+                             key=key)
+            return new_state, None
+
+        state, _ = jax.lax.scan(step, state,
+                                (sel_chunk, train_chunk, cohort_idx))
+        return state
+
+    return run_span
+
+
 def span_boundaries(rounds: int, eval_every: int) -> list[int]:
     """Eval checkpoints of the classic loop: every ``eval_every`` rounds
-    plus the final round — spans run scan-fused between them."""
-    stops = list(range(eval_every, rounds + 1, max(1, eval_every)))
+    plus the final round — spans run scan-fused between them.
+
+    ``eval_every > rounds`` means a single span ending at the final round;
+    non-positive values are rejected (they used to silently produce a
+    bogus round-0 boundary / negative stops).
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    stops = list(range(eval_every, rounds + 1, eval_every))
     if not stops or stops[-1] != rounds:
         stops.append(rounds)
     return stops

@@ -32,6 +32,7 @@ Paper §III ↔ registry names:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -62,6 +63,9 @@ class RoundCtx:
     tau: int                 # CC-FedAvg(c) switch round
     stale_delta: PyTree      # x_{t-1,K}^i − x_t re-expressed as a delta
     trained_delta: PyTree    # x_K^i − x_t from this round's local training
+    #: mesh axis the client dimension is shard_map'ed over (sharded
+    #: executor); None everywhere else. Aggregations must reduce across it.
+    axis_name: str | None = None
 
 
 @dataclass(frozen=True)
@@ -88,8 +92,9 @@ class Strategy:
 
     def aggregate(self, delta_i: PyTree, aggf: jax.Array,
                   ctx: RoundCtx) -> PyTree:
-        """Eq. 3: unweighted masked mean over the client axis."""
-        return tree_masked_mean(delta_i, aggf)
+        """Eq. 3: unweighted masked mean over the client axis (reduced
+        across shards when the client axis is shard_map'ed)."""
+        return tree_masked_mean(delta_i, aggf, axis_name=ctx.axis_name)
 
     def update_history(self, state: PyTree, ctx: RoundCtx,
                        trained_delta: PyTree, local: PyTree,
@@ -108,6 +113,28 @@ class Strategy:
         raise NotImplementedError(
             f"strategy {self.name!r} has no pod-level estimate "
             "(needs per-client history beyond stored deltas)")
+
+    # ---- cohort gather/scatter (sharded executor) -----------------------
+
+    #: per-client state rows a cohort round reads and writes; strategies
+    #: that keep extra history extend this tuple and the hooks below
+    history_keys: tuple[str, ...] = ("deltas", "prev_local", "trained_ever")
+
+    def gather_history(self, state: PyTree, idx: jax.Array) -> PyTree:
+        """Pull the cohort's rows out of the full-N per-client history —
+        the sharded executor moves only the active clients' state onto the
+        client mesh each round."""
+        take = functools.partial(jnp.take, indices=idx, axis=0)
+        return {k: jax.tree.map(take, state[k]) for k in self.history_keys}
+
+    def scatter_history(self, state: PyTree, idx: jax.Array,
+                        updated: PyTree) -> PyTree:
+        """Write a cohort round's updated history rows back into the
+        full-N state (non-members keep their rows untouched)."""
+        def put(full, rows):
+            return full.at[idx].set(rows)
+        return {k: jax.tree.map(put, state[k], updated[k])
+                for k in self.history_keys}
 
 
 # ---------------------------------------------------------------------------
@@ -221,9 +248,14 @@ class FedNova(Strategy):
         ka = jnp.maximum(ctx.k_active.astype(jnp.float32), 1.0)
         d_norm = jax.tree.map(
             lambda x: x / ka.reshape((-1,) + (1,) * (x.ndim - 1)), delta_i)
-        coeff = jnp.sum(aggf * ka) / jnp.maximum(jnp.sum(aggf), 1e-9)
-        return jax.tree.map(lambda x: coeff * x,
-                            tree_masked_mean(d_norm, aggf))
+        num, den = jnp.sum(aggf * ka), jnp.sum(aggf)
+        if ctx.axis_name is not None:      # reduce step counts across shards
+            num = jax.lax.psum(num, ctx.axis_name)
+            den = jax.lax.psum(den, ctx.axis_name)
+        coeff = num / jnp.maximum(den, 1e-9)
+        return jax.tree.map(
+            lambda x: coeff * x,
+            tree_masked_mean(d_norm, aggf, axis_name=ctx.axis_name))
 
 
 # ---------------------------------------------------------------------------

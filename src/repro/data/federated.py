@@ -39,6 +39,49 @@ class FederatedData:
         return jax.vmap(one)(keys, self.x, self.y, self.sizes)
 
 
+@dataclass(frozen=True)
+class CohortSampler:
+    """Per-round cohorts for cross-device federations with N ≫ devices.
+
+    The vectorized executors materialize every client's state, but a round
+    only needs the sampled participants on device: the sharded executor
+    gathers the cohort's history rows, runs the round ``shard_map``'ed over
+    the client mesh, and scatters the updated rows back. Sampling is
+    uniform without replacement and *absolute-round keyed* — round ``t``
+    always draws the same cohort for a given seed, so resumed sessions see
+    identical cohorts regardless of where they restart (the same contract
+    the plan masks follow).
+
+    ``cohort_size == n_clients`` degenerates to full participation
+    (``indices_for(t) == arange(N)``), which is how the sharded executor
+    stays numerically interchangeable with the others.
+    """
+
+    n_clients: int
+    cohort_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 1 <= self.cohort_size <= self.n_clients:
+            raise ValueError(
+                f"cohort_size must be in [1, {self.n_clients}], "
+                f"got {self.cohort_size}")
+
+    def indices_for(self, t: int) -> np.ndarray:
+        """Sorted participant ids for round ``t`` (deterministic in seed)."""
+        if self.cohort_size == self.n_clients:
+            return np.arange(self.n_clients)
+        rng = np.random.default_rng((self.seed, t))
+        return np.sort(rng.choice(self.n_clients, size=self.cohort_size,
+                                  replace=False))
+
+    def indices(self, rounds: int, start: int = 0) -> np.ndarray:
+        """(rounds, cohort_size) int32 cohort table for rounds
+        ``start .. start+rounds``."""
+        return np.stack([self.indices_for(start + t)
+                         for t in range(rounds)]).astype(np.int32)
+
+
 def build_federated(ds: Dataset, parts: list[np.ndarray]) -> FederatedData:
     n_clients = len(parts)
     m = max(len(p) for p in parts)

@@ -30,3 +30,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU tests of the sharded code paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_client_mesh(n_shards: int | None = None):
+    """1-D ``("clients",)`` mesh for the sharded federated executor.
+
+    The stacked client dimension of the round state is ``shard_map``'ed over
+    this axis (:func:`repro.core.rounds.make_sharded_span_runner`). Defaults
+    to all visible devices; pass ``n_shards`` to use a prefix of them.
+    """
+    n = len(jax.devices()) if n_shards is None else n_shards
+    if n < 1 or n > len(jax.devices()):
+        raise ValueError(f"n_shards must be in [1, {len(jax.devices())}], "
+                         f"got {n}")
+    return jax.make_mesh((n,), ("clients",))
+
+
+def best_client_shards(cohort_size: int, max_shards: int | None = None) -> int:
+    """Largest device count ≤ ``max_shards`` that divides the cohort —
+    ``shard_map`` needs the cohort split evenly, so e.g. a 6-client cohort
+    on a 4-device host uses 3 shards rather than failing."""
+    limit = min(cohort_size, max_shards or len(jax.devices()))
+    return max(d for d in range(1, limit + 1) if cohort_size % d == 0)

@@ -96,17 +96,29 @@ def tree_broadcast_clients(tree: PyTree, n_clients: int) -> PyTree:
 
 
 def tree_masked_mean(tree: PyTree, mask: jax.Array, axis: int = 0,
-                     eps: float = 1e-12) -> PyTree:
+                     eps: float = 1e-12,
+                     axis_name: str | None = None) -> PyTree:
     """Mean over the leading (client) axis weighted by ``mask``.
 
     ``mask`` has shape (n_clients,); leaves have shape (n_clients, ...).
     Equivalent to ``(1/|S_t|) Σ_{i∈S_t}`` in the paper's aggregation (Eq. 3).
+
+    Inside ``shard_map`` the client axis is split across devices; passing the
+    mesh ``axis_name`` makes both the numerator and the mask count reduce
+    across shards (``lax.psum``), so the mean is over the *global* client
+    axis and the result is replicated.
     """
-    denom = jnp.maximum(jnp.sum(mask), eps)
+    count = jnp.sum(mask)
+    if axis_name is not None:
+        count = jax.lax.psum(count, axis_name)
+    denom = jnp.maximum(count, eps)
 
     def _mean(x):
         m = mask.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        return jnp.sum(x * m, axis=axis) / denom.astype(x.dtype)
+        s = jnp.sum(x * m, axis=axis)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        return s / denom.astype(x.dtype)
 
     return jax.tree.map(_mean, tree)
 

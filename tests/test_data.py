@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.data.federated import build_federated
+from repro.data.federated import CohortSampler, build_federated
 from repro.data.partition import (budget_law, partition_classes,
                                   partition_gamma, skewed_budget_assignment,
                                   two_group_budget)
@@ -92,3 +92,49 @@ def test_train_test_split_disjoint(ds):
     tr, te = train_test_split(ds, test_frac=0.25, seed=0)
     assert len(tr) + len(te) == len(ds)
     assert abs(len(te) - 0.25 * len(ds)) < 2
+
+
+# ---------------------------------------------------------------------------
+# CohortSampler (sharded executor participant sampling)
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_sampler_uniform_without_replacement():
+    s = CohortSampler(50, 10, seed=0)
+    counts = np.zeros(50, int)
+    for t in range(200):
+        idx = s.indices_for(t)
+        assert len(np.unique(idx)) == 10            # no replacement
+        assert (np.sort(idx) == idx).all()          # sorted for gather
+        assert idx.min() >= 0 and idx.max() < 50
+        counts[idx] += 1
+    # every client participates and rates are roughly uniform (±50%)
+    assert counts.min() > 0
+    assert counts.max() < 2.0 * 200 * 10 / 50
+
+
+def test_cohort_sampler_deterministic_and_round_keyed():
+    a = CohortSampler(30, 6, seed=5)
+    b = CohortSampler(30, 6, seed=5)
+    np.testing.assert_array_equal(a.indices_for(17), b.indices_for(17))
+    # different rounds and seeds draw different cohorts
+    assert not np.array_equal(a.indices_for(0), a.indices_for(1)) or \
+        not np.array_equal(a.indices_for(1), a.indices_for(2))
+    c = CohortSampler(30, 6, seed=6)
+    assert any(not np.array_equal(a.indices_for(t), c.indices_for(t))
+               for t in range(5))
+
+
+def test_cohort_sampler_table_matches_per_round():
+    s = CohortSampler(20, 4, seed=1)
+    tab = s.indices(8, start=2)
+    assert tab.shape == (8, 4) and tab.dtype == np.int32
+    for t in range(8):
+        np.testing.assert_array_equal(tab[t], s.indices_for(2 + t))
+
+
+def test_cohort_sampler_validates():
+    with pytest.raises(ValueError):
+        CohortSampler(10, 0)
+    with pytest.raises(ValueError):
+        CohortSampler(10, 11)

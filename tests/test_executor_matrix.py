@@ -1,0 +1,184 @@
+"""Cross-executor differential matrix.
+
+Four numerically-interchangeable executors now run the same round
+semantics — {python, scan, fused, sharded} — so equivalence is pinned
+systematically: every executor × every registered strategy × every
+algorithm variant must reproduce the python-loop oracle's final params and
+metric stream to ≤1e-5. The oracle runs once per strategy and is shared
+across cells (the variant axis provably never enters round numerics — it
+drives the Appendix-A cost accounting, which every cell smoke-checks
+instead).
+
+The sharded executor is additionally pinned on its own semantics: a
+sampled cohort round equals a full round whose masks are zeroed outside
+the cohort (clients keep their global training keys), and cohort/mesh
+validation errors fire eagerly.
+
+This file must pass both on the default 1-device CPU and under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+executor-matrix job), where ``shard_map`` really splits the client axis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, Session
+from repro.core.rounds import (FedConfig, init_fed_state, make_round_fn,
+                               make_sharded_span_runner)
+from repro.core.schedules import make_plan
+from repro.core.strategies import available_strategies, get_strategy
+from repro.data.federated import CohortSampler, build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.launch.mesh import best_client_shards, make_client_mesh
+from repro.models.simple import make_classifier
+
+N = 4
+EXECUTORS = ("python", "scan", "fused", "sharded")
+VARIANTS = ("client", "server", "mixed")
+ATOL = 1e-5
+
+
+def _spec(strategy: str, executor: str) -> ExperimentSpec:
+    use_fused = executor == "fused"
+    return ExperimentSpec(
+        dataset="gaussian", n_samples=256, dim=8, n_classes=4,
+        n_clients=N, budget="power", beta=2, model="mlp", width=4,
+        strategy=strategy, local_steps=2, batch_size=16, lr=0.1,
+        schedule="adhoc", rounds=6, eval_every=2, seed=0,
+        executor="scan" if use_fused else executor, use_fused=use_fused)
+
+
+_RUNS: dict = {}
+
+
+def _run(strategy: str, executor: str):
+    """Final params + metric stream for one cell (memoized: the variant
+    axis never enters round numerics, so cells share runs)."""
+    key = (strategy, executor)
+    if key not in _RUNS:
+        sess = Session.from_spec(_spec(strategy, executor)).run()
+        _RUNS[key] = (jax.tree.map(np.asarray, sess.state["params"]),
+                      sess.metrics.series("test_acc"), sess)
+    return _RUNS[key]
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("strategy", available_strategies())
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_matrix_matches_python_oracle(executor, strategy, variant):
+    if executor == "fused" and not get_strategy(strategy).fused_capable:
+        pytest.skip(f"{strategy} is not fused-capable")
+    oracle_params, oracle_accs, _ = _run(strategy, "python")
+    params, accs, sess = _run(strategy, executor)
+    np.testing.assert_allclose(accs, oracle_accs, atol=ATOL,
+                               err_msg=f"{executor}/{strategy} metric "
+                                       "stream diverged")
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(oracle_params)):
+        np.testing.assert_allclose(a, b, atol=ATOL,
+                                   err_msg=f"{executor}/{strategy} params")
+    # the variant axis: identical numerics, distinct cost accounting
+    rep = sess.cost_report(variant=variant)
+    assert rep["upload_bytes"] >= 0
+
+
+def test_matrix_covers_every_registered_strategy():
+    """The matrix parametrizes over the live registry — a new strategy is
+    covered the moment it registers."""
+    assert set(available_strategies()) >= {
+        "fedavg", "dropout", "s1", "s2", "cc", "ccc", "fednova", "cc_decay"}
+
+
+# ---------------------------------------------------------------------------
+# sharded-executor cohort semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, N, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    return model, fd
+
+
+@pytest.mark.parametrize("strategy", ["cc", "s2", "fednova"])
+def test_cohort_round_equals_masked_full_round(setup, strategy):
+    """A sampled M-cohort round must equal the full-federation round whose
+    sel/train masks are False outside the cohort: client keys are derived
+    globally, history scatter leaves non-members untouched, and the
+    aggregation denominator only counts members either way."""
+    model, fd = setup
+    fed = FedConfig(strategy=strategy, local_steps=2, batch_size=16, lr=0.1)
+    k = jnp.full((N,), fed.local_steps, jnp.int32)
+    plan = make_plan("adhoc", budget_law(N, beta=2), 6, seed=1)
+    sel, train = jnp.asarray(plan.selection), jnp.asarray(plan.training)
+
+    sharded = make_sharded_span_runner(model, fd, fed, cohort_size=2)
+    sampler = CohortSampler(N, 2, seed=3)
+    idx_tab = sampler.indices(plan.rounds)
+    s_cohort = sharded(init_fed_state(jax.random.PRNGKey(0), model, N),
+                       sel, train, k, jnp.asarray(idx_tab))
+
+    rf = make_round_fn(model, fd, fed)
+    s_ref = init_fed_state(jax.random.PRNGKey(0), model, N)
+    for t in range(plan.rounds):
+        member = np.zeros(N, bool)
+        member[idx_tab[t]] = True
+        s_ref = rf(s_ref, jnp.asarray(plan.selection[t] & member),
+                   jnp.asarray(plan.training[t] & member), k)
+
+    for key in ("params", "deltas", "prev_local"):
+        for a, b in zip(jax.tree.leaves(s_cohort[key]),
+                        jax.tree.leaves(s_ref[key])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=ATOL, err_msg=key)
+    np.testing.assert_array_equal(np.asarray(s_cohort["trained_ever"]),
+                                  np.asarray(s_ref["trained_ever"]))
+
+
+def test_cohort_sampler_is_absolute_round_keyed():
+    s = CohortSampler(100, 10, seed=7)
+    np.testing.assert_array_equal(s.indices(5, start=3)[0], s.indices_for(3))
+    # full participation degenerates to arange
+    full = CohortSampler(8, 8, seed=7)
+    np.testing.assert_array_equal(full.indices_for(42), np.arange(8))
+
+
+def test_sharded_rejects_bad_cohorts(setup):
+    model, fd = setup
+    fed = FedConfig(strategy="cc", local_steps=2)
+    with pytest.raises(ValueError, match="cohort_size"):
+        make_sharded_span_runner(model, fd, fed, cohort_size=N + 1)
+    with pytest.raises(ValueError, match="cohort_size"):
+        make_sharded_span_runner(model, fd, fed, cohort_size=0)
+    with pytest.raises(ValueError, match="clients"):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        make_sharded_span_runner(model, fd, fed, mesh=mesh)
+
+
+def test_best_client_shards_divides():
+    n_dev = len(jax.devices())
+    for m in (1, 2, 3, 4, 6, 8, 64):
+        d = best_client_shards(m)
+        assert m % d == 0 and 1 <= d <= n_dev
+    assert best_client_shards(6, max_shards=4) == 3
+
+
+def test_client_mesh_axis():
+    mesh = make_client_mesh()
+    assert mesh.axis_names == ("clients",)
+    assert mesh.devices.size == len(jax.devices())
+    with pytest.raises(ValueError):
+        make_client_mesh(len(jax.devices()) + 1)
+
+
+def test_sharded_session_rejects_fused(setup):
+    model, fd = setup
+    with pytest.raises(ValueError, match="use_fused"):
+        Session(model, fd, FedConfig(strategy="cc"),
+                make_plan("full", np.ones(N), 2), executor="sharded",
+                use_fused=True)

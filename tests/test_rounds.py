@@ -202,6 +202,40 @@ def test_span_boundaries_match_legacy_eval_cadence():
         assert span_boundaries(rounds, every) == sorted(set(legacy))
 
 
+def test_span_boundaries_eval_every_beyond_rounds_is_one_span():
+    # a cadence longer than the plan means exactly one span, ending at the
+    # final round — no phantom boundaries
+    assert span_boundaries(5, 10) == [5]
+    assert span_boundaries(1, 100) == [1]
+    assert span_boundaries(7, 7) == [7]
+
+
+@pytest.mark.parametrize("bad", [0, -1, -100])
+def test_span_boundaries_rejects_nonpositive_eval_every(bad):
+    # regression: eval_every=0 used to emit a bogus round-0 boundary and
+    # negative values produced negative stops
+    with pytest.raises(ValueError, match="eval_every"):
+        span_boundaries(10, bad)
+
+
+@pytest.mark.parametrize("bad", [0, -1])
+def test_span_boundaries_rejects_nonpositive_rounds(bad):
+    with pytest.raises(ValueError, match="rounds"):
+        span_boundaries(bad, 5)
+
+
+def test_session_rejects_nonpositive_eval_every(setup):
+    # the session guards eagerly (its python loop would otherwise die on a
+    # modulo-by-zero mid-run)
+    from repro.api import Session
+    model, fd, te = setup
+    plan = make_plan("full", np.ones(N), 2)
+    with pytest.raises(ValueError, match="eval_every"):
+        Session(model, fd, FedConfig(strategy="cc"), plan,
+                x_test=jnp.asarray(te.x), y_test=jnp.asarray(te.y),
+                eval_every=0)
+
+
 def test_unknown_executor_raises(setup):
     model, fd, te = setup
     plan = make_plan("full", np.ones(N), 2)

@@ -1,15 +1,19 @@
-"""Strategy registry: dispatch, round-trip, cc_decay semantics, and the
-Appendix-A cost-report variants."""
+"""Strategy registry: dispatch, round-trip, cc_decay semantics, the
+Appendix-A cost-report variants, and property-based hook invariants
+(replayed deterministically through the hypothesis shim when the real
+package is absent)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import (FedConfig, STRATEGIES, cost_report,
                                init_fed_state, make_round_fn)
 from repro.core.schedules import make_plan
-from repro.core.strategies import (CCDecay, Strategy, available_strategies,
-                                   get_strategy, register)
+from repro.core.strategies import (CCDecay, RoundCtx, Strategy,
+                                   available_strategies, get_strategy,
+                                   register)
 from repro.data.federated import build_federated
 from repro.data.partition import partition_gamma
 from repro.data.synthetic import make_dataset, train_test_split
@@ -177,3 +181,91 @@ def test_cost_report_mixed_interpolates(plan, frac):
 def test_cost_report_unknown_variant_raises(plan):
     with pytest.raises(ValueError):
         cost_report(plan, 1000, variant="nonsense")
+
+
+# ---------------------------------------------------------------------------
+# property-based hook invariants (any strategy, any masks)
+# ---------------------------------------------------------------------------
+
+
+def _tree(n, scale=1.0, seed=0):
+    r = np.random.default_rng(seed)
+    return {"w": jnp.asarray(scale * r.standard_normal((n, 3)), jnp.float32),
+            "b": jnp.asarray(scale * r.standard_normal((n,)), jnp.float32)}
+
+
+def _ctx(sel, train, k, rnd=1, tau=100):
+    n = len(sel)
+    return RoundCtx(sel_mask=jnp.asarray(sel, bool),
+                    train_mask=jnp.asarray(train, bool),
+                    k_active=jnp.asarray(k, jnp.int32),
+                    round=jnp.asarray(rnd, jnp.int32), tau=tau,
+                    stale_delta=_tree(n, seed=1), trained_delta=_tree(n))
+
+
+@settings(max_examples=25)
+@given(name=st.sampled_from(available_strategies()),
+       sel=st.lists(st.booleans(), min_size=N, max_size=N),
+       train=st.lists(st.booleans(), min_size=N, max_size=N),
+       c=st.floats(min_value=-3.0, max_value=3.0))
+def test_aggregation_weights_sum_to_one(name, sel, train, c):
+    """Under ANY sel/train mask (uniform step counts), every strategy's
+    aggregation is a convex combination: aggregating identical per-client
+    deltas returns that delta unchanged — the Eq.-3 weights sum to 1."""
+    strategy = get_strategy(name)
+    ctx = _ctx(sel, train, [3] * N)
+    aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+    const = jax.tree.map(lambda x: jnp.full_like(x, c), _tree(N))
+    out = strategy.aggregate(const, aggf, ctx)
+    # empty rounds aggregate to exactly zero (eps denominator), otherwise
+    # the weights are convex and the constant comes back unchanged
+    expect = c if bool(aggf.sum() > 0) else 0.0
+    for leaf in jax.tree.leaves(out):
+        np.testing.assert_allclose(np.asarray(leaf), expect, atol=1e-5)
+
+
+_ALL_TRAIN_PARAMS: dict = {}
+
+
+def _all_train_round(setup, name):
+    if name not in _ALL_TRAIN_PARAMS:
+        model, fd = setup
+        fed = FedConfig(strategy=name, local_steps=2, batch_size=16, lr=0.1)
+        rf = make_round_fn(model, fd, fed)
+        state = init_fed_state(jax.random.PRNGKey(0), model, N)
+        on = jnp.ones(N, bool)
+        state = rf(state, on, on, jnp.full((N,), 2, jnp.int32))
+        _ALL_TRAIN_PARAMS[name] = jax.tree.map(np.asarray, state["params"])
+    return _ALL_TRAIN_PARAMS[name]
+
+
+@given(name=st.sampled_from(available_strategies()))
+def test_estimation_is_noop_when_all_train(setup, name):
+    """When every client really trains, estimates never enter the round:
+    all strategies collapse to the same FedAvg update (FedNova included —
+    uniform step counts make its normalization cancel exactly)."""
+    ref = _all_train_round(setup, "fedavg")
+    got = _all_train_round(setup, name)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(a, b, atol=1e-6, err_msg=name)
+
+
+@settings(max_examples=25)
+@given(name=st.sampled_from(available_strategies()),
+       sel=st.lists(st.booleans(), min_size=N, max_size=N),
+       train=st.lists(st.booleans(), min_size=N, max_size=N))
+def test_update_history_is_mask_idempotent(name, sel, train):
+    """Applying ``update_history`` twice with the same masks and round
+    inputs is a no-op the second time — history written for a mask pattern
+    is stable until the inputs change."""
+    strategy = get_strategy(name)
+    ctx = _ctx(sel, train, [3] * N)
+    trained_delta, local, est = _tree(N, seed=2), _tree(N, seed=3), \
+        _tree(N, seed=4)
+    state = {"deltas": _tree(N, seed=5), "prev_local": _tree(N, seed=6)}
+    d1, p1 = strategy.update_history(state, ctx, trained_delta, local, est)
+    d2, p2 = strategy.update_history({"deltas": d1, "prev_local": p1},
+                                     ctx, trained_delta, local, est)
+    for a, b in zip(jax.tree.leaves((d1, p1)), jax.tree.leaves((d2, p2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
