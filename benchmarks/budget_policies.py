@@ -1,0 +1,139 @@
+"""Policy-decision overhead in the scan executor.
+
+The budget-policy engine moves the train/estimate decision inside the
+traced round loop (device-state advance + policy decide + ledger update
+per round). This benchmark times the scan executor three ways on identical
+work:
+
+* **masks** — the seed-era mask-mode span runner (precomputed (C, N)
+  train chunk, no device simulator in the carry): the baseline;
+* **precompiled** — the policy engine replaying the same plan through
+  ``PrecompiledPolicy`` (bit-identical decisions, in-trace);
+* **energy** — a live ``EnergyAware`` policy over the simulated devices.
+
+The acceptance target is ≤5% round-throughput overhead for the in-loop
+decision machinery vs precompiled masks; all three paths run the same
+local-training FLOPs, so any gap is pure decision/simulator cost.
+
+Emits machine-readable results to ``BENCH_budget_policies.json``
+(``--json`` to change the path, empty string to disable).
+
+    PYTHONPATH=src python benchmarks/budget_policies.py [--rounds 100]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.budget import EnergyAware, PrecompiledPolicy
+from repro.core.engine import FedConfig, init_fed_state
+from repro.core.rounds import make_policy_span_runner, make_span_runner
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+from repro.system.devices import make_profile
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+
+
+def _time_span(mk_state, run, reps):
+    best = float("inf")
+    for _ in range(reps):
+        state = mk_state()
+        t0 = time.perf_counter()
+        _block(run(state))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_budget_policies.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+
+    ds = make_dataset("teacher", n=2048, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, args.clients, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    p = budget_law(args.clients, beta=4)
+    plan = make_plan("adhoc", p, args.rounds, seed=0)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=32, lr=0.1)
+    k = jnp.full((args.clients,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+    profile = make_profile("budget", p, load_mean=0.3, load_jitter=0.2,
+                           seed=0)
+    precompiled = PrecompiledPolicy.from_plan(plan)
+    energy = EnergyAware()
+
+    key = jax.random.PRNGKey(0)
+    n = fd.n_clients
+    mask_run = make_span_runner(model, fd, fed)
+    pre_run = make_policy_span_runner(model, fd, fed, precompiled, profile)
+    egy_run = make_policy_span_runner(model, fd, fed, energy, profile)
+
+    variants = {
+        "masks": (lambda: init_fed_state(key, model, n),
+                  lambda s: mask_run(s, sel, train, k)),
+        "precompiled": (
+            lambda: init_fed_state(key, model, n, policy=precompiled,
+                                   profile=profile),
+            lambda s: pre_run(s, sel, k)),
+        "energy": (
+            lambda: init_fed_state(key, model, n, policy=energy,
+                                   profile=profile),
+            lambda s: egy_run(s, sel, k)),
+    }
+    # warmup / compile every path before timing
+    for mk, run in variants.values():
+        _block(run(mk()))
+
+    times = {name: _time_span(mk, run, args.reps)
+             for name, (mk, run) in variants.items()}
+    base = times["masks"]
+    print(f"rounds={args.rounds} clients={args.clients} "
+          f"K={args.local_steps} (best of {args.reps})")
+    for name, t in times.items():
+        over = (t - base) / base
+        print(f"{name:<12}: {t * 1e3:8.1f} ms total "
+              f"({t / args.rounds * 1e3:6.3f} ms/round, "
+              f"overhead {over:+6.1%})")
+        print(f"csv,budget_policies,{name},{t * 1e6:.0f}")
+    if args.json:
+        payload = {
+            "bench": "budget_policies",
+            "config": {"rounds": args.rounds, "clients": args.clients,
+                       "local_steps": args.local_steps, "reps": args.reps},
+            "masks_s": times["masks"],
+            "precompiled_s": times["precompiled"],
+            "energy_s": times["energy"],
+            "precompiled_overhead_frac":
+                (times["precompiled"] - base) / base,
+            "energy_overhead_frac": (times["energy"] - base) / base,
+            "target_overhead_frac": 0.05,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

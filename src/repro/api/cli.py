@@ -22,6 +22,15 @@ Executor selection rides the spec fields: ``--set executor=sharded --set
 cohort_size=8`` runs each round's sampled cohort shard_map'ed over the
 client mesh (all visible devices), ``--set use_fused=true`` takes the
 fused Pallas path.
+
+Budget policies: ``--policy {precompiled,energy,deadline,adaptive}`` picks
+the in-loop train/estimate decision maker and ``--device-profile
+{budget,uniform}`` the simulated device runtime (shorthands for the spec
+fields of the same names; fine-grained knobs ride ``--set``, e.g. ``--set
+energy_capacity=2.0 --set load_mean=0.3 --set deadline=1.5``):
+
+    python -m repro run exp.json --policy energy --set harvest_scale=0.8
+    python -m repro sweep exp.json --grid policy=precompiled,energy,adaptive
 """
 from __future__ import annotations
 
@@ -63,9 +72,15 @@ def _parse_grids(pairs: list[str]) -> dict:
     return out
 
 
-def _load_spec(path: str, sets: list[str]) -> ExperimentSpec:
+def _load_spec(path: str, sets: list[str],
+               policy: str | None = None,
+               device_profile: str | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
+    if policy:
+        overrides["policy"] = policy
+    if device_profile:
+        overrides["device_profile"] = device_profile
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -87,7 +102,8 @@ def cmd_init(args) -> int:
 
 
 def cmd_run(args) -> int:
-    spec = _load_spec(args.spec, args.set)
+    spec = _load_spec(args.spec, args.set, policy=args.policy,
+                      device_profile=args.device_profile)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -122,12 +138,23 @@ def cmd_resume(args) -> int:
 
 
 def cmd_sweep(args) -> int:
-    spec = _load_spec(args.spec, args.set)
+    spec = _load_spec(args.spec, args.set, policy=args.policy,
+                      device_profile=args.device_profile)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
     print(format_table(result))
     return 0
+
+
+def _add_policy_flags(p: argparse.ArgumentParser) -> None:
+    from repro.core.budget import POLICY_KINDS
+    p.add_argument("--policy", default=None, choices=POLICY_KINDS,
+                   help="budget policy (shorthand for --set policy=...)")
+    p.add_argument("--device-profile", default=None,
+                   choices=("budget", "uniform"),
+                   help="device runtime (shorthand for --set "
+                        "device_profile=...)")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -146,6 +173,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("spec")
     p.add_argument("--set", action="append", default=[],
                    metavar="FIELD=VALUE")
+    _add_policy_flags(p)
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--save-every", type=int, default=0,
                    help="checkpoint every N rounds (with --ckpt-dir)")
@@ -165,6 +193,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("spec")
     p.add_argument("--set", action="append", default=[],
                    metavar="FIELD=VALUE")
+    _add_policy_flags(p)
     p.add_argument("--grid", action="append", default=[], required=True,
                    metavar="FIELD=V1,V2")
     p.add_argument("--out", default="")

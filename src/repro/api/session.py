@@ -13,9 +13,16 @@ Determinism contract (pinned by ``tests/test_api.py``):
 * a Session run and the legacy ``run_federated`` produce identical final
   params and metric streams;
 * ``save()`` checkpoints the FULL state (params, Δ history, stale local
-  models, RNG key, round counter, metrics), so a killed run restored with
+  models, RNG key, round counter, metrics — plus the budget-policy rows,
+  simulated device state and energy ledger), so a killed run restored with
   :meth:`Session.restore_from` continues bit-identically — evaluation
   points follow the *absolute* round cadence, never the resume point.
+
+Every session runs the budget-policy engine (:mod:`repro.core.budget`):
+train/estimate decisions happen inside the traced round loop against
+simulated device state (:mod:`repro.system.devices`). A session built
+without an explicit ``policy`` replays its plan's training table through
+``PrecompiledPolicy`` — bit-for-bit the legacy static-plan behaviour.
 """
 from __future__ import annotations
 
@@ -27,13 +34,16 @@ import numpy as np
 
 from repro.api.callbacks import Callback
 from repro.checkpoint.store import CheckpointManager
+from repro.core.budget import PrecompiledPolicy
 from repro.core.evaluation import evaluate
-from repro.core.rounds import (FedConfig, init_fed_state, make_round_fn,
-                               make_sharded_span_runner, make_span_runner,
-                               span_boundaries)
+from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_policy_round_fn,
+                               make_policy_span_runner,
+                               make_sharded_span_runner, span_boundaries)
 from repro.core.schedules import Plan, fednova_local_steps
 from repro.data.federated import CohortSampler, FederatedData
 from repro.models.simple import Classifier
+from repro.system.devices import make_profile
 from repro.utils.logging import MetricLogger
 from repro.utils.pytree import PyTree, tree_bytes
 
@@ -58,7 +68,7 @@ class Session:
                  use_fused: bool = False,
                  callbacks: Iterable[Callback] = (),
                  ckpt_dir: str | None = None, keep: int = 3,
-                 spec=None):
+                 spec=None, policy=None, profile=None):
         if executor not in ("scan", "python", "sharded"):
             raise ValueError(f"unknown executor {executor!r}")
         if executor == "sharded" and use_fused:
@@ -66,10 +76,21 @@ class Session:
                              "executor; pick one fast path")
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+        if (policy is None) != (profile is None):
+            raise ValueError("pass policy and profile together (or neither "
+                             "for the plan-replaying default)")
+        if policy is None:
+            # every session runs the budget-policy engine; a bare plan is
+            # replayed bit-for-bit through PrecompiledPolicy over a
+            # budget-shaped device profile
+            policy = PrecompiledPolicy.from_plan(plan)
+            profile = make_profile("budget", plan.p, seed=fed.seed)
         self.model = model
         self.data = data
         self.fed = fed
         self.plan = plan
+        self.policy = policy
+        self.profile = profile
         self.x_test = x_test
         self.y_test = y_test
         self.eval_every = eval_every
@@ -80,10 +101,10 @@ class Session:
         self.metrics = MetricLogger()
         self.k_active = plan_k_active(data, fed, plan)
         self.state: PyTree = init_fed_state(jax.random.PRNGKey(fed.seed),
-                                            model, data.n_clients)
+                                            model, data.n_clients,
+                                            policy=policy, profile=profile)
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
-        self._train = jnp.asarray(plan.training)
         self._cohort = None
         if executor == "sharded":
             # absolute-round-keyed cohorts: resumed sessions sample the
@@ -110,7 +131,7 @@ class Session:
                    y_test=b.y_test, eval_every=spec.eval_every,
                    executor=spec.executor, use_fused=spec.use_fused,
                    callbacks=callbacks, ckpt_dir=ckpt_dir, keep=keep,
-                   spec=spec)
+                   spec=spec, policy=b.policy, profile=b.profile)
 
     @classmethod
     def restore_from(cls, ckpt_dir: str, *, step: int | None = None,
@@ -145,32 +166,35 @@ class Session:
 
     def _get_round_fn(self):
         if self._round_fn is None:
-            self._round_fn = make_round_fn(self.model, self.data, self.fed,
-                                           fused=self.use_fused)
+            self._round_fn = make_policy_round_fn(
+                self.model, self.data, self.fed, self.policy, self.profile,
+                fused=self.use_fused)
         return self._round_fn
 
     def _get_span_runner(self):
         if self._span_runner is None:
             if self.executor == "sharded":
                 self._span_runner = make_sharded_span_runner(
-                    self.model, self.data, self.fed)
+                    self.model, self.data, self.fed, policy=self.policy,
+                    profile=self.profile)
             else:
-                self._span_runner = make_span_runner(
-                    self.model, self.data, self.fed, fused=self.use_fused)
+                self._span_runner = make_policy_span_runner(
+                    self.model, self.data, self.fed, self.policy,
+                    self.profile, fused=self.use_fused)
         return self._span_runner
 
     def _advance_span(self, stop: int) -> None:
         """Run rounds ``self._t .. stop`` as one span with the configured
         span runner (the sharded runner additionally takes its cohort
-        table slice)."""
+        table slice). Training decisions are made in-trace by the budget
+        policy; only the selection masks are staged."""
         t, run_span = self._t, self._get_span_runner()
         if self.executor == "sharded":
             self.state = run_span(self.state, self._sel[t:stop],
-                                  self._train[t:stop], self.k_active,
-                                  self._cohort[t:stop])
+                                  self.k_active, self._cohort[t:stop])
         else:
             self.state = run_span(self.state, self._sel[t:stop],
-                                  self._train[t:stop], self.k_active)
+                                  self.k_active)
         self._t = stop
 
     def step(self) -> PyTree:
@@ -187,7 +211,7 @@ class Session:
             self._advance_span(t + 1)
         else:
             self.state = self._get_round_fn()(
-                self.state, self._sel[t], self._train[t], self.k_active)
+                self.state, self._sel[t], self.k_active)
             self._t = t + 1
         for cb in self.callbacks:
             cb.on_round_end(self, self._t)
@@ -275,7 +299,8 @@ class Session:
         by :meth:`save` (in-place; session config must match)."""
         mgr = self._require_mgr(ckpt_dir)
         like = init_fed_state(jax.random.PRNGKey(self.fed.seed),
-                              self.model, self.data.n_clients)
+                              self.model, self.data.n_clients,
+                              policy=self.policy, profile=self.profile)
         state, extra = mgr.restore(like, step=step)
         self.state = state
         self._t = int(extra.get("round", extra.get("step", 0)))
@@ -299,15 +324,36 @@ class Session:
 
     def cost_report(self, variant: str | None = None,
                     mixed_client_frac: float = 0.5) -> dict:
-        """Appendix-A storage/upload accounting for this run's plan."""
-        from repro.core.engine import cost_report
-        return cost_report(self.plan, tree_bytes(self.state["params"]),
-                           variant=variant or self.fed.variant,
-                           mixed_client_frac=mixed_client_frac)
+        """Appendix-A storage/upload accounting from the REALIZED ledger —
+        the train/estimate decisions the policy actually made, not the
+        static plan's table (for ``PrecompiledPolicy`` over a fully-run
+        plan the two coincide; for runtime policies only the ledger is
+        truthful)."""
+        from repro.core.engine import cost_report_from_counts
+        led = self.ledger()
+        decided = led["train_rounds"] + led["est_rounds"]
+        per_client = led["train_rounds"] / np.maximum(1, decided)
+        return cost_report_from_counts(
+            int(led["train_rounds"].sum()), int(led["est_rounds"].sum()),
+            self.data.n_clients, tree_bytes(self.state["params"]),
+            variant=variant or self.fed.variant,
+            mixed_client_frac=mixed_client_frac, per_client=per_client)
+
+    def ledger(self) -> dict:
+        """Per-client energy/cost books accumulated in the round carry:
+        ``energy_spent`` / ``train_rounds`` / ``est_rounds`` numpy arrays
+        (checkpointed with the state, so they survive a resume)."""
+        return {k: np.asarray(v) for k, v in self.state["ledger"].items()}
 
     def summary(self) -> dict:
-        out = {"rounds_done": self._t, "strategy": self.fed.strategy}
+        out = {"rounds_done": self._t, "strategy": self.fed.strategy,
+               "policy": self.policy.name}
         if "test_acc" in self.metrics.history:
             out["test_acc"] = self.metrics.last("test_acc")
             out["test_acc_best"] = self.metrics.best("test_acc")
+        led = self.ledger()
+        decided = int(led["train_rounds"].sum() + led["est_rounds"].sum())
+        out["train_fraction"] = (
+            float(led["train_rounds"].sum()) / max(1, decided))
+        out["energy_spent"] = float(led["energy_spent"].sum())
         return out

@@ -22,6 +22,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.budget import POLICY_KINDS, BudgetPolicy, make_policy
 from repro.core.rounds import FedConfig
 from repro.core.schedules import Plan, make_plan
 from repro.data.federated import FederatedData, build_federated
@@ -29,9 +30,11 @@ from repro.data.partition import (budget_law, partition_classes,
                                   partition_gamma, two_group_budget)
 from repro.data.synthetic import make_dataset, train_test_split
 from repro.models.simple import Classifier, make_classifier
+from repro.system.devices import DeviceProfile, make_profile
 
 #: schema version embedded in serialized specs; bump on breaking changes
-SPEC_VERSION = 1
+#: (v2: runtime budget policies + device-profile fields)
+SPEC_VERSION = 2
 
 _DATASETS = ("gaussian", "teacher", "image")
 _PARTITIONS = ("gamma", "classes")
@@ -39,6 +42,7 @@ _BUDGETS = ("power", "two_group", "uniform", "explicit")
 _MODELS = ("mlp", "cnn", "resnet18")
 _SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
 _EXECUTORS = ("scan", "python", "sharded")
+_DEVICE_PROFILES = ("budget", "uniform")
 
 
 @dataclass(frozen=True)
@@ -51,6 +55,8 @@ class Bundle:
     x_test: jnp.ndarray
     y_test: jnp.ndarray
     p: np.ndarray
+    policy: BudgetPolicy
+    profile: DeviceProfile
 
 
 @dataclass(frozen=True)
@@ -96,6 +102,21 @@ class ExperimentSpec:
     rounds: int = 80
     participation: float = 1.0
 
+    # ---- budget policy + device runtime ---------------------------------
+    #: train/estimate decision maker (core/budget.py): "precompiled"
+    #: replays the legacy ``schedule`` plan bit-for-bit; the runtime kinds
+    #: (energy | deadline | adaptive) decide in-loop from device state
+    policy: str = "precompiled"
+    device_profile: str = "budget"   # budget | uniform (system/devices.py)
+    energy_capacity: float = 4.0     # reserve ceiling (train-cost units)
+    energy_init: float = 1.0         # round-0 reserve
+    harvest_scale: float = 1.0       # × p_i energy recovered per round
+    load_mean: float = 0.0           # stationary background load
+    load_rho: float = 0.7            # AR(1) load persistence
+    load_jitter: float = 0.0         # load noise amplitude
+    deadline: float = 2.0            # DeadlineAware: × nominal round time
+    adapt_eta: float = 0.5           # AdaptiveProbability feedback gain
+
     # ---- execution ------------------------------------------------------
     eval_every: int = 20
     executor: str = "scan"         # scan | python | sharded
@@ -110,6 +131,16 @@ class ExperimentSpec:
         _check("model", self.model, _MODELS)
         _check("schedule", self.schedule, _SCHEDULES)
         _check("executor", self.executor, _EXECUTORS)
+        _check("policy", self.policy, POLICY_KINDS)
+        _check("device_profile", self.device_profile, _DEVICE_PROFILES)
+        if self.energy_capacity <= 0:
+            raise ValueError(f"energy_capacity must be > 0, got "
+                             f"{self.energy_capacity}")
+        if self.deadline <= 0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.adapt_eta < 0:
+            raise ValueError(f"adapt_eta must be >= 0, got "
+                             f"{self.adapt_eta}")
         if self.budget == "explicit":
             if not self.p:
                 raise ValueError("budget='explicit' requires p=(...)")
@@ -224,9 +255,17 @@ class ExperimentSpec:
         plan = make_plan(self.schedule, p, self.rounds,
                          participation_ratio=self.participation,
                          seed=self.seed)
+        profile = make_profile(
+            self.device_profile, p, capacity=self.energy_capacity,
+            init_energy=self.energy_init, harvest_scale=self.harvest_scale,
+            load_mean=self.load_mean, load_rho=self.load_rho,
+            load_jitter=self.load_jitter, seed=self.seed)
+        policy = make_policy(self.policy, plan=plan, deadline=self.deadline,
+                             eta=self.adapt_eta)
         return Bundle(model=model, data=data, fed=self.fed_config(),
                       plan=plan, x_test=jnp.asarray(test.x),
-                      y_test=jnp.asarray(test.y), p=p)
+                      y_test=jnp.asarray(test.y), p=p, policy=policy,
+                      profile=profile)
 
 
 def _check(name: str, value: str, allowed: Sequence[str]) -> None:

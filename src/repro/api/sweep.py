@@ -76,12 +76,18 @@ def run_sweep(base: ExperimentSpec, grid: Mapping[str, Sequence[Any]],
 
 def format_table(result: dict) -> str:
     """Table-I-style text comparison: one row per cell, sorted by final
-    accuracy, with the compute/upload savings next to it."""
+    accuracy, with the compute/upload savings next to it. The compute
+    column shows the per-client breakdown (``cost_report``'s
+    ``compute_frac_per_client``) as a min–max work range — the scalar mean
+    hides exactly the heterogeneity the budget law creates."""
     rows = [f"{'cell':<36}{'acc':>8}{'best':>8}"
-            f"{'compute saved':>15}{'upload MB':>11}"]
+            f"{'compute saved':>15}{'client work':>14}{'upload MB':>11}"]
     for key in result["ranking"]:
         c = result["cells"][key]
+        per_client = c["cost"]["compute_frac_per_client"]
+        spread = f"{min(per_client):.2f}-{max(per_client):.2f}"
         rows.append(f"{key:<36}{c['acc']:>8.3f}{c['acc_best']:>8.3f}"
                     f"{c['cost']['compute_saved_frac']:>14.1%}"
+                    f"{spread:>14}"
                     f"{c['cost']['upload_bytes'] / 1e6:>11.1f}")
     return "\n".join(rows)

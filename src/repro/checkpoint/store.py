@@ -27,6 +27,13 @@ _SEP = "/"
 FED_STATE_KEYS = ("params", "deltas", "prev_local", "trained_ever",
                   "round", "key")
 
+#: policy-mode carry keys (budget-policy rows, simulated device state,
+#: energy/cost ledger — ``repro.core.budget`` / ``repro.system.devices``).
+#: Saved whenever present; a stateful policy resumed without them would
+#: silently restart its decision state, so ``save_fed_state`` treats them
+#: as required once any of them appears in the state.
+POLICY_STATE_KEYS = ("policy", "device", "ledger")
+
 
 def _is_typed_key(leaf) -> bool:
     try:
@@ -116,7 +123,12 @@ def load_pytree(path: str, like: PyTree | None = None
     for path_entries, leaf in paths:
         key = _SEP.join(_name(p) for p in path_entries)
         if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
+            raise KeyError(
+                f"checkpoint missing leaf {key!r} — the file predates the "
+                "current state schema (e.g. a pre-policy-engine checkpoint "
+                "without policy/device/ledger state) or was saved from a "
+                "different configuration; re-run from the spec instead of "
+                "resuming")
         arr = flat[key]
         if dtypes.get(key, "").startswith("prngkey:"):
             leaves.append(_revive(key, arr))
@@ -142,6 +154,13 @@ def save_fed_state(path: str, state: PyTree,
         raise ValueError(
             f"federated state is missing {missing}; a resumable checkpoint "
             f"needs all of {list(FED_STATE_KEYS)} (got {sorted(state)})")
+    if any(k in state for k in POLICY_STATE_KEYS):
+        missing = [k for k in POLICY_STATE_KEYS if k not in state]
+        if missing:
+            raise ValueError(
+                f"policy-mode state is missing {missing}; a resumable "
+                f"checkpoint needs all of {list(POLICY_STATE_KEYS)} once "
+                "any is present")
     save_pytree(path, state, extra=extra)
 
 

@@ -6,7 +6,12 @@
   runner, fused Pallas fast path.
 * :mod:`repro.core.engine`     — host-side driver (Alg. 1/2/3), evaluation,
   Appendix-A cost accounting.
-* :mod:`repro.core.schedules`  — round-robin / ad-hoc / sync / dropout plans.
+* :mod:`repro.core.budget`     — runtime budget policies: traced in-loop
+  train/estimate decisions over simulated device state
+  (:mod:`repro.system.devices`); legacy plans replay bit-for-bit through
+  ``PrecompiledPolicy``.
+* :mod:`repro.core.schedules`  — round-robin / ad-hoc / sync / dropout
+  plans (now policy *inputs*, no longer engine inputs).
 * :mod:`repro.core.podlevel`   — pods-as-clients CC-FedAvg for LLM-scale
   training on the multi-pod mesh.
 """
@@ -19,7 +24,19 @@ from repro.core.engine import (  # noqa: F401
     evaluate,
     cost_report,
 )
+from repro.core.budget import (  # noqa: F401
+    AdaptiveProbability,
+    BudgetCtx,
+    BudgetPolicy,
+    DeadlineAware,
+    EnergyAware,
+    PrecompiledPolicy,
+    available_policies,
+    make_policy,
+)
 from repro.core.rounds import (  # noqa: F401
+    make_policy_round_fn,
+    make_policy_span_runner,
     make_round_body,
     make_sharded_span_runner,
     make_span_runner,

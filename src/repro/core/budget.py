@@ -1,0 +1,221 @@
+"""Runtime budget policies: traced in-loop train/estimate decisions.
+
+The paper's premise is that clients "determine whether to perform
+traditional local training or model estimation *in each round* based on
+their current computational budgets" (§VI-A; Fig. 1b ad-hoc mode). The
+seed-era engine precompiled every decision into a static (T, N) plan; this
+module moves the decision *inside* the traced round loop, where it can
+react to the simulated device runtime (:mod:`repro.system.devices`):
+energy reserves, background load, deadlines, duty cycles.
+
+A policy is two pure-JAX hooks:
+
+* ``init_rows(n_clients)`` — per-client policy-state rows (a dict of (N,)
+  arrays; may be empty). Rows ride in the round carry next to the Δ
+  history, are gathered/scattered per cohort by the sharded executor, and
+  are checkpointed with the rest of the federated state — resume is
+  bit-identical.
+* ``decide(rows, ctx)`` → ``(train_mask, new_rows)`` — the round-t
+  decision, traced under ``jit``/``scan``/``shard_map``. ``ctx`` is a
+  :class:`BudgetCtx` of per-client views (device state, profile rows,
+  absolute client ids, selection mask, duty mask).
+
+Every legacy schedule kind survives as a special case:
+:class:`PrecompiledPolicy` replays a :func:`repro.core.schedules.make_plan`
+training table bit-for-bit (pinned per kind × executor in
+``tests/test_executor_matrix.py``), so ``make_plan`` is now only a *policy
+input*, not an engine input. Native runtime policies — EnergyAware,
+DeadlineAware, AdaptiveProbability — express the adaptive/energy/deadline
+workloads the resource-constrained-FL surveys (arXiv:2307.09182,
+arXiv:2002.10610) catalogue.
+
+Stochastic policies draw stateless randomness keyed on (seed, round,
+client id) via ``fold_in`` — identical under resume, cohort sharding and
+every executor, the same contract the device simulator follows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.system.devices import device_awake, stateless_uniform
+
+
+@dataclass(frozen=True)
+class BudgetCtx:
+    """Everything a policy may condition on in one round. All array members
+    are per-client rows of the *decision cohort* (the full federation, or a
+    gathered shard under the sharded executor)."""
+
+    round: jax.Array        # () int32 — current round t
+    client_ids: jax.Array   # (M,) int32 — absolute client ids
+    sel_mask: jax.Array     # (M,) bool — server selection S_t
+    device: dict            # {"energy", "load"} per-client device state
+    profile: dict           # DeviceProfile.rows() (gathered)
+    awake: jax.Array        # (M,) bool — duty-cycle mask for round t
+    seed: int               # static stream id for stateless randomness
+
+
+@dataclass(frozen=True)
+class BudgetPolicy:
+    """Base policy: hooks only; subclasses implement ``decide``."""
+
+    #: registry key; subclasses override via their ``name`` field default
+    name: str = ""
+
+    def init_rows(self, n_clients: int) -> dict:
+        """Per-client policy-state rows. Default: stateless (empty dict —
+        still a valid carry/checkpoint/gather target)."""
+        return {}
+
+    def decide(self, rows: dict, ctx: BudgetCtx
+               ) -> tuple[jax.Array, dict]:
+        """Return (train_mask, new_rows). ``train_mask`` is ANDed with the
+        selection mask by the executor, so a policy never needs to."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# legacy schedules as a policy
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecompiledPolicy(BudgetPolicy):
+    """Replay a static (T, N) training table — every legacy schedule kind
+    (`round_robin`/`adhoc`/`sync`/`dropout`/`full`) rides through here
+    bit-for-bit. The table is closed over as a trace-time constant; round
+    ``t`` reads row ``t`` gathered at the cohort's absolute client ids."""
+
+    name: str = "precompiled"
+    table: jax.Array | None = None     # (T, N) bool
+
+    def __post_init__(self):
+        if self.table is None:
+            raise ValueError("PrecompiledPolicy needs a (T, N) training "
+                             "table (e.g. make_plan(...).training)")
+        object.__setattr__(self, "table", jnp.asarray(self.table, bool))
+
+    @classmethod
+    def from_plan(cls, plan) -> "PrecompiledPolicy":
+        return cls(table=jnp.asarray(plan.training))
+
+    def decide(self, rows, ctx):
+        return self.table[ctx.round][ctx.client_ids], rows
+
+
+# ---------------------------------------------------------------------------
+# native runtime policies
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EnergyAware(BudgetPolicy):
+    """Train iff the reserve covers this round's training cost (plus an
+    optional safety margin), and the device is awake. With the ``"budget"``
+    profile (harvest = p_i · cost) the sustainable training fraction is
+    ≈ p_i — the energy-ledger translation of the paper's budgets."""
+
+    name: str = "energy"
+    reserve_frac: float = 0.0   # keep this × train_cost in reserve
+
+    def decide(self, rows, ctx):
+        need = ctx.profile["train_cost"] * (1.0 + self.reserve_frac)
+        return (ctx.device["energy"] >= need) & ctx.awake, rows
+
+
+@dataclass(frozen=True)
+class DeadlineAware(BudgetPolicy):
+    """Train iff the *estimated round time* meets the server deadline.
+
+    Round time for client i is ``1 / (flops_rate_i · (1 − load_i))`` in
+    units of the nominal unloaded round; a slow or heavily-loaded device
+    would straggle past the deadline, so it estimates instead (the
+    straggler-avoidance workload of arXiv:2002.10610 §IV)."""
+
+    name: str = "deadline"
+    deadline: float = 2.0       # × nominal round time
+
+    def __post_init__(self):
+        if self.deadline <= 0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+
+    def decide(self, rows, ctx):
+        speed = ctx.profile["flops_rate"] * (1.0 - ctx.device["load"])
+        round_time = 1.0 / jnp.maximum(speed, 1e-6)
+        return (round_time <= self.deadline) & ctx.awake, rows
+
+
+@dataclass(frozen=True)
+class AdaptiveProbability(BudgetPolicy):
+    """Ad-hoc mode with feedback: train with probability p_i, nudged by how
+    far the client's realized training fraction has drifted from p_i.
+
+    Rows track per-client (trained, seen) counts; the effective probability
+    is ``clip(p_i + eta · (p_i − trained/seen), 0, 1)`` — a client that
+    fell behind its budget (e.g. it slept through duty-off rounds) catches
+    up, one that overspent backs off. ``eta = 0`` recovers the paper's
+    memoryless ad-hoc coin flips exactly."""
+
+    name: str = "adaptive"
+    eta: float = 0.5
+
+    def __post_init__(self):
+        if self.eta < 0:
+            raise ValueError(f"eta must be >= 0, got {self.eta}")
+
+    def init_rows(self, n_clients):
+        return {"trained": jnp.zeros((n_clients,), jnp.float32),
+                "seen": jnp.zeros((n_clients,), jnp.float32)}
+
+    def decide(self, rows, ctx):
+        p = ctx.profile["budget"]
+        frac = rows["trained"] / jnp.maximum(rows["seen"], 1.0)
+        p_eff = jnp.clip(p + self.eta * (p - frac), 0.0, 1.0)
+        u = stateless_uniform(ctx.seed, ctx.round, ctx.client_ids)
+        mask = (u < p_eff) & ctx.awake
+        counted = (ctx.sel_mask & mask).astype(jnp.float32)
+        new_rows = {"trained": rows["trained"] + counted,
+                    "seen": rows["seen"] + ctx.sel_mask.astype(jnp.float32)}
+        return mask, new_rows
+
+
+# ---------------------------------------------------------------------------
+# registry / factory
+# ---------------------------------------------------------------------------
+
+POLICY_KINDS = ("precompiled", "energy", "deadline", "adaptive")
+
+
+def available_policies() -> tuple[str, ...]:
+    return POLICY_KINDS
+
+
+def make_policy(kind: str, *, plan=None, deadline: float = 2.0,
+                eta: float = 0.5, reserve_frac: float = 0.0) -> BudgetPolicy:
+    """Build a policy by kind. ``"precompiled"`` requires a legacy
+    :class:`~repro.core.schedules.Plan` (its training table is replayed
+    bit-for-bit); the runtime kinds take their scalar knobs."""
+    if kind == "precompiled":
+        if plan is None:
+            raise ValueError("policy='precompiled' needs a plan "
+                             "(make_plan output) to replay")
+        return PrecompiledPolicy.from_plan(plan)
+    if kind == "energy":
+        return EnergyAware(reserve_frac=reserve_frac)
+    if kind == "deadline":
+        return DeadlineAware(deadline=deadline)
+    if kind == "adaptive":
+        return AdaptiveProbability(eta=eta)
+    raise ValueError(f"unknown policy kind {kind!r}; available: "
+                     f"{', '.join(POLICY_KINDS)}")
+
+
+def budget_ctx(rows_profile: dict, dev: dict, rnd, client_ids: jax.Array,
+               sel_mask: jax.Array, seed: int) -> BudgetCtx:
+    """Assemble the per-round decision context (shared by all executors)."""
+    return BudgetCtx(round=rnd, client_ids=client_ids, sel_mask=sel_mask,
+                     device=dev, profile=rows_profile,
+                     awake=device_awake(rows_profile, rnd), seed=seed)

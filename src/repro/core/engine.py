@@ -118,10 +118,29 @@ def run_federated(model: Classifier, data: FederatedData, fed: FedConfig,
 
 def cost_report(plan: Plan, model_bytes: int, variant: str = "client",
                 mixed_client_frac: float = 0.5) -> dict:
-    """Appendix-A accounting: per-variant storage & upload bytes."""
-    t, n = plan.selection.shape
-    trained = (plan.selection & plan.training).sum()
-    estimated = (plan.selection & ~plan.training).sum()
+    """Appendix-A accounting from a static plan's tables (see
+    :func:`cost_report_from_counts` for the count-based core — sessions
+    running a *runtime* budget policy account from their realized ledger
+    instead, since the plan's training table never executed)."""
+    trained = int((plan.selection & plan.training).sum())
+    estimated = int((plan.selection & ~plan.training).sum())
+    return cost_report_from_counts(
+        trained, estimated, plan.n_clients, model_bytes, variant=variant,
+        mixed_client_frac=mixed_client_frac,
+        per_client=plan.compute_fraction(per_client=True))
+
+
+def cost_report_from_counts(trained: int, estimated: int, n: int,
+                            model_bytes: int, variant: str = "client",
+                            mixed_client_frac: float = 0.5,
+                            per_client=None) -> dict:
+    """Appendix-A accounting from raw train/estimate round counts.
+
+    ``trained``/``estimated`` are federation-wide counts of sel∧train and
+    sel∧¬train client-rounds; ``per_client`` the (N,) trained-when-selected
+    fractions. Works identically for precompiled plans and realized
+    ledgers.
+    """
     if variant == "client":        # Alg. 1
         up = (trained + estimated) * model_bytes
         client_store = model_bytes          # each client keeps its Δ
@@ -138,10 +157,16 @@ def cost_report(plan: Plan, model_bytes: int, variant: str = "client",
         server_store = int((1 - c) * n * model_bytes)
     else:
         raise ValueError(variant)
-    grad_steps_saved = 1.0 - plan.compute_fraction()
+    grad_steps_saved = 1.0 - trained / max(1, trained + estimated)
+    if per_client is None:
+        per_client = []
     return {
         "upload_bytes": int(up),
         "client_storage_bytes": int(client_store),
         "server_storage_bytes": int(server_store),
         "compute_saved_frac": grad_steps_saved,
+        # per-client breakdown: how much of its FedAvg(full) work each
+        # client actually performed (the scalar hides exactly the
+        # heterogeneity the budget law creates)
+        "compute_frac_per_client": [float(v) for v in per_client],
     }

@@ -4,6 +4,18 @@ Four ways to run the same round semantics, all built from one traceable
 cohort-round core (:func:`_cohort_round`) so they are numerically
 interchangeable:
 
+Two decision modes feed every executor:
+
+* **mask mode** (the seed-era contract) — the caller passes precomputed
+  ``sel``/``train`` masks per round;
+* **policy mode** (:func:`make_policy_round_body` and friends) — a
+  :class:`repro.core.budget.BudgetPolicy` decides ``train`` *inside the
+  trace* from simulated device state (:mod:`repro.system.devices`), whose
+  energy/load/ledger rows advance in the round carry. Eval-free spans stay
+  a single ``lax.scan``; the sharded executor decides per-shard on the
+  gathered device rows. ``PrecompiledPolicy`` makes mask mode a special
+  case, bit-for-bit (pinned in ``tests/test_executor_matrix.py``).
+
 * :func:`make_round_fn` — one jitted round (the classic per-round API);
 * :func:`make_span_runner` — ``jax.lax.scan`` over a stacked (C, N) chunk
   of plan masks, so an eval-free span of C rounds executes as ONE jitted
@@ -52,6 +64,10 @@ _FUSED_PAD = 512               # flat params padded to a tile-friendly multiple
 #: mesh axis name the sharded executor splits the client dimension over
 CLIENT_AXIS = "clients"
 
+#: the mask-mode federated state keys (policy mode adds policy/device/ledger)
+_BASE_KEYS = ("params", "deltas", "prev_local", "trained_ever", "round",
+              "key")
+
 
 @dataclass(frozen=True)
 class FedConfig:
@@ -96,10 +112,14 @@ def _local_train(model: Classifier, params, key, cx, cy, size,
     return params
 
 
-def init_fed_state(rng, model: Classifier, n_clients: int) -> PyTree:
+def init_fed_state(rng, model: Classifier, n_clients: int, *,
+                   policy=None, profile=None) -> PyTree:
+    """Fresh federated state. With ``policy`` + ``profile`` the carry also
+    holds the budget-policy rows, the simulated device state and the
+    energy/cost ledger (policy mode); without, the seed-era 6-key state."""
     params = model.init(rng)
     zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
-    return {
+    state = {
         "params": params,
         "deltas": zeros,                       # Δ_{t−1}^i  (Strategy 3)
         "prev_local": tree_broadcast_clients(params, n_clients),
@@ -107,6 +127,15 @@ def init_fed_state(rng, model: Classifier, n_clients: int) -> PyTree:
         "round": jnp.zeros((), jnp.int32),
         "key": rng,
     }
+    if (policy is None) != (profile is None):
+        raise ValueError("policy mode needs BOTH policy and profile "
+                         "(got exactly one)")
+    if policy is not None:
+        from repro.system.devices import init_device_state, init_ledger
+        state["policy"] = policy.init_rows(n_clients)
+        state["device"] = init_device_state(profile)
+        state["ledger"] = init_ledger(n_clients)
+    return state
 
 
 def _round_keys(key, n: int):
@@ -137,7 +166,8 @@ def _train_cohort(model: Classifier, fed: FedConfig, params, keys,
 
 def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
                   params, rnd, hist, cx, cy, sizes, keys,
-                  sel_mask, train_mask, k_active, axis_name=None):
+                  sel_mask, train_mask, k_active, axis_name=None,
+                  energy=None):
     """One round over a cohort view of the federation.
 
     ``hist`` holds the cohort's per-client rows (``deltas`` / ``prev_local``
@@ -158,7 +188,7 @@ def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
     ctx = RoundCtx(sel_mask=sel_mask, train_mask=train_mask,
                    k_active=k_active, round=rnd, tau=fed.tau,
                    stale_delta=stale_delta, trained_delta=trained_delta,
-                   axis_name=axis_name)
+                   axis_name=axis_name, energy=energy)
     est = strategy.estimate(hist, ctx)
     delta_i = masked_select(train_mask, trained_delta, est)
 
@@ -187,12 +217,12 @@ def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
     if fused:
         return _make_fused_round_body(model, data, fed, strategy)
 
-    def round_body(state, sel_mask, train_mask, k_active):
+    def round_body(state, sel_mask, train_mask, k_active, energy=None):
         key, keys = _round_keys(state["key"], data.n_clients)
         new_params, new_hist = _cohort_round(
             model, fed, strategy, state["params"], state["round"], state,
             data.x, data.y, data.sizes, keys, sel_mask, train_mask,
-            k_active)
+            k_active, energy=energy)
         return {
             "params": new_params,
             **new_hist,
@@ -215,7 +245,7 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
             f"strategy {strategy.name!r} is not fused-capable (the kernel "
             "replays stored Δ verbatim); use the tree-ops path")
 
-    def round_body(state, sel_mask, train_mask, k_active):
+    def round_body(state, sel_mask, train_mask, k_active, energy=None):
         key, keys = _round_keys(state["key"], data.n_clients)
         _, local = _train_cohort(model, fed, state["params"], keys,
                                  data.x, data.y, data.sizes, k_active)
@@ -274,9 +304,86 @@ def make_span_runner(model: Classifier, data: FederatedData, fed: FedConfig,
     return run_span
 
 
+# ---------------------------------------------------------------------------
+# policy mode: traced in-loop decisions over simulated device state
+# ---------------------------------------------------------------------------
+
+
+def make_policy_round_body(model: Classifier, data: FederatedData,
+                           fed: FedConfig, policy, profile, *,
+                           fused: bool = False):
+    """The policy-mode round transition ``(state, sel_mask, k_active) →
+    state``: the train/estimate decision happens *inside the trace* —
+    ``policy.decide`` reads the carried device state, the device simulator
+    advances, and the energy ledger accumulates. Wraps the same mask-mode
+    round body every executor uses, so round numerics are identical given
+    identical decisions."""
+    from repro.core.budget import budget_ctx
+    from repro.system.devices import advance_devices, update_ledger
+
+    if profile.n_clients != data.n_clients:
+        raise ValueError(
+            f"device profile covers {profile.n_clients} clients, data has "
+            f"{data.n_clients}")
+    base = make_round_body(model, data, fed, fused=fused)
+    rows = profile.rows()
+    ids = jnp.arange(data.n_clients, dtype=jnp.int32)
+
+    def round_body(state, sel_mask, k_active):
+        dev = state["device"]
+        ctx = budget_ctx(rows, dev, state["round"], ids, sel_mask,
+                         profile.seed)
+        train_mask, new_rows = policy.decide(state["policy"], ctx)
+        train_mask = train_mask & sel_mask
+        base_state = {k: state[k] for k in _BASE_KEYS}
+        new_base = base(base_state, sel_mask, train_mask, k_active,
+                        energy=dev["energy"])
+        spent = sel_mask & train_mask
+        new_base["policy"] = new_rows
+        new_base["device"] = advance_devices(rows, dev, spent,
+                                             state["round"], ids,
+                                             profile.seed)
+        new_base["ledger"] = update_ledger(state["ledger"], rows, sel_mask,
+                                           train_mask)
+        return new_base
+
+    return round_body
+
+
+def make_policy_round_fn(model: Classifier, data: FederatedData,
+                         fed: FedConfig, policy, profile, *,
+                         fused: bool = False):
+    """One jitted policy-mode round: ``round_fn(state, sel_mask,
+    k_active)``."""
+    return jax.jit(make_policy_round_body(model, data, fed, policy, profile,
+                                          fused=fused))
+
+
+def make_policy_span_runner(model: Classifier, data: FederatedData,
+                            fed: FedConfig, policy, profile, *,
+                            fused: bool = False):
+    """Policy-mode scan executor: ``run_span(state, sel_chunk, k_active)``
+    advances a (C, N) span of *selection* masks as one jitted ``lax.scan``
+    — training decisions, device dynamics and the ledger are all traced, so
+    an eval-free span is still a single program with no host sync."""
+    round_body = make_policy_round_body(model, data, fed, policy, profile,
+                                        fused=fused)
+
+    @jax.jit
+    def run_span(state, sel_chunk, k_active):
+        def step(st, sel):
+            return round_body(st, sel, k_active), None
+
+        state, _ = jax.lax.scan(step, state, sel_chunk)
+        return state
+
+    return run_span
+
+
 def make_sharded_span_runner(model: Classifier, data: FederatedData,
                              fed: FedConfig, *, mesh=None,
-                             cohort_size: int | None = None):
+                             cohort_size: int | None = None,
+                             policy=None, profile=None):
     """Sharded executor: ``run_span(state, sel_chunk, train_chunk, k_active,
     cohort_idx)`` advances the federation over a (C, N) chunk of plan masks
     with each round's cohort ``shard_map``'ed over the ``clients`` mesh axis.
@@ -294,12 +401,29 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
     ``mesh`` defaults to a 1-D client mesh over the largest device count
     that divides the cohort (:func:`repro.launch.mesh.make_client_mesh`);
     an explicit mesh must divide it.
+
+    With ``policy`` + ``profile`` set (policy mode) the signature drops the
+    train chunk — ``run_span(state, sel_chunk, k_active, cohort_idx)`` —
+    and each round *decides* per-shard: the cohort's policy rows, device
+    rows and profile rows are gathered alongside the history, and the
+    decision runs inside ``shard_map`` (every policy op is per-client
+    elementwise, so no cross-shard reduction is needed). The device advance
+    and ledger update then run over the FULL federation outside the shard
+    — off-cohort devices keep harvesting and their load keeps evolving,
+    exactly as in a full round where they simply aren't selected. Together
+    with decision randomness keyed on absolute client ids, this makes a
+    sampled-cohort policy round EQUAL a full policy round whose selection
+    mask is zeroed outside the cohort (pinned bit-for-bit in
+    ``tests/test_executor_matrix.py``).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
     from repro.launch.mesh import best_client_shards, make_client_mesh
     from repro.sharding.api import ShardingContext
 
+    if (policy is None) != (profile is None):
+        raise ValueError("policy mode needs BOTH policy and profile "
+                         "(got exactly one)")
     strategy = fed.resolve()
     n = data.n_clients
     m = cohort_size if cohort_size is not None else (fed.cohort_size or n)
@@ -321,35 +445,101 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
     cspec = ctx_sh.spec((CLIENT_AXIS,))       # shard leading (cohort) dim
     rspec = PartitionSpec()                   # replicated
 
-    def shard_body(params, rnd, hist, keys, cx, cy, sizes, sel, train, ka):
-        return _cohort_round(model, fed, strategy, params, rnd, hist,
-                             cx, cy, sizes, keys, sel, train, ka,
-                             axis_name=CLIENT_AXIS)
+    if policy is None:
+        def shard_body(params, rnd, hist, keys, cx, cy, sizes, sel, train,
+                       ka):
+            return _cohort_round(model, fed, strategy, params, rnd, hist,
+                                 cx, cy, sizes, keys, sel, train, ka,
+                                 axis_name=CLIENT_AXIS)
+
+        cohort_round = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(rspec, rspec, cspec, cspec, cspec, cspec, cspec,
+                      cspec, cspec, cspec),
+            out_specs=(rspec, cspec))
+
+        @jax.jit
+        def run_span(state, sel_chunk, train_chunk, k_active, cohort_idx):
+            def step(st, xs):
+                sel, train, idx = xs
+                key, keys = _round_keys(st["key"], n)
+                take = functools.partial(jnp.take, indices=idx, axis=0)
+                hist = strategy.gather_history(st, idx)
+                new_params, new_hist = cohort_round(
+                    st["params"], st["round"], hist, take(keys),
+                    take(data.x), take(data.y), take(data.sizes),
+                    take(sel), take(train), take(k_active))
+                new_state = strategy.scatter_history(st, idx, new_hist)
+                new_state.update(params=new_params, round=st["round"] + 1,
+                                 key=key)
+                return new_state, None
+
+            state, _ = jax.lax.scan(step, state,
+                                    (sel_chunk, train_chunk, cohort_idx))
+            return state
+
+        return run_span
+
+    # ---- policy mode: decide per-shard on gathered device rows ----------
+    from repro.core.budget import budget_ctx
+    from repro.system.devices import advance_devices, update_ledger
+
+    if profile.n_clients != n:
+        raise ValueError(
+            f"device profile covers {profile.n_clients} clients, data has "
+            f"{n}")
+    prof_rows = profile.rows()
+    all_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def shard_body(params, rnd, hist, keys, cx, cy, sizes, sel, ka,
+                   pol, dev, prof, ids):
+        ctx = budget_ctx(prof, dev, rnd, ids, sel, profile.seed)
+        train, new_pol = policy.decide(pol, ctx)
+        train = train & sel
+        new_params, new_hist = _cohort_round(
+            model, fed, strategy, params, rnd, hist, cx, cy, sizes, keys,
+            sel, train, ka, axis_name=CLIENT_AXIS, energy=dev["energy"])
+        return new_params, new_hist, new_pol, train
 
     cohort_round = shard_map(
         shard_body, mesh=mesh,
         in_specs=(rspec, rspec, cspec, cspec, cspec, cspec, cspec, cspec,
-                  cspec, cspec),
-        out_specs=(rspec, cspec))
+                  cspec, cspec, cspec, cspec, cspec),
+        out_specs=(rspec, cspec, cspec, cspec))
 
     @jax.jit
-    def run_span(state, sel_chunk, train_chunk, k_active, cohort_idx):
+    def run_span(state, sel_chunk, k_active, cohort_idx):
         def step(st, xs):
-            sel, train, idx = xs
+            sel, idx = xs
             key, keys = _round_keys(st["key"], n)
             take = functools.partial(jnp.take, indices=idx, axis=0)
             hist = strategy.gather_history(st, idx)
-            new_params, new_hist = cohort_round(
+            new_params, new_hist, new_pol, train_c = cohort_round(
                 st["params"], st["round"], hist, take(keys),
                 take(data.x), take(data.y), take(data.sizes),
-                take(sel), take(train), take(k_active))
+                take(sel), take(k_active),
+                jax.tree.map(take, st["policy"]),
+                jax.tree.map(take, st["device"]),
+                jax.tree.map(take, prof_rows), idx)
             new_state = strategy.scatter_history(st, idx, new_hist)
+            new_state["policy"] = jax.tree.map(
+                lambda full, part: full.at[idx].set(part),
+                st["policy"], new_pol)
+            # off-cohort clients behave exactly as unselected clients of a
+            # full round: no training spend, no ledger entry — but their
+            # devices keep harvesting and their load keeps evolving
+            eff_sel = sel & jnp.zeros((n,), bool).at[idx].set(True)
+            train_full = jnp.zeros((n,), bool).at[idx].set(train_c)
+            new_state["device"] = advance_devices(
+                prof_rows, st["device"], train_full, st["round"], all_ids,
+                profile.seed)
+            new_state["ledger"] = update_ledger(st["ledger"], prof_rows,
+                                                eff_sel, train_full)
             new_state.update(params=new_params, round=st["round"] + 1,
                              key=key)
             return new_state, None
 
-        state, _ = jax.lax.scan(step, state,
-                                (sel_chunk, train_chunk, cohort_idx))
+        state, _ = jax.lax.scan(step, state, (sel_chunk, cohort_idx))
         return state
 
     return run_span

@@ -1,7 +1,16 @@
 """Participation & training schedules (paper §VI-A).
 
-A federated run is driven by two precomputed boolean plans over
-(rounds T × clients N):
+.. deprecated::
+    Plans are no longer an *engine* input: the round executors decide
+    train-vs-estimate in-loop through :mod:`repro.core.budget` policies,
+    and every schedule kind below survives as a
+    ``PrecompiledPolicy(make_plan(...).training)`` special case, replayed
+    bit-for-bit (pinned per kind × executor in
+    ``tests/test_executor_matrix.py``). ``make_plan`` remains the
+    compatibility shim that builds those tables plus the server-side
+    selection masks.
+
+A plan is two precomputed boolean tables over (rounds T × clients N):
 
 * ``selection`` — which clients the server selects each round (S_t),
 * ``training``  — which selected clients perform real local training
@@ -38,21 +47,43 @@ class Plan:
     def n_clients(self) -> int:
         return self.selection.shape[1]
 
-    def compute_fraction(self) -> float:
-        """Fraction of FedAvg(full) gradient work actually performed."""
-        return float((self.selection & self.training).sum()
-                     / max(1, self.selection.sum()))
+    def compute_fraction(self, per_client: bool = False):
+        """Fraction of FedAvg(full) gradient work actually performed.
+
+        ``per_client=True`` returns the (N,) breakdown — each client's
+        trained-when-selected fraction — instead of the federation-wide
+        scalar (clients never selected report 0).
+        """
+        trained = (self.selection & self.training).sum(axis=0)
+        selected = self.selection.sum(axis=0)
+        if per_client:
+            return trained / np.maximum(1, selected)
+        return float(trained.sum() / max(1, selected.sum()))
 
 
 def server_selection(rng: np.random.Generator, t_rounds: int, n: int,
                      ratio: float = 1.0) -> np.ndarray:
+    """Uniform k-of-N participation per round, vectorized: one (T, N)
+    uniform draw, each round selecting its k smallest entries — one rng
+    call and a partition instead of T ``choice`` loops (``random((T, N))``
+    fills row-major, so round t's row equals the t-th sequential
+    ``random(N)`` draw; equality with the per-round loop formulation is
+    pinned in ``tests/test_fed_engine.py``).
+
+    .. note::
+        The distribution is unchanged (uniform without replacement), but
+        the seeded bit-stream differs from the pre-vectorization
+        ``rng.choice`` loop — same-seed plans with ``participation < 1``
+        select different (equally-distributed) cohorts than they did
+        before the vectorization. Full participation consumes no
+        randomness in either version.
+    """
     if ratio >= 1.0:
         return np.ones((t_rounds, n), bool)
     k = max(1, int(round(ratio * n)))
-    sel = np.zeros((t_rounds, n), bool)
-    for t in range(t_rounds):
-        sel[t, rng.choice(n, size=k, replace=False)] = True
-    return sel
+    u = rng.random((t_rounds, n))
+    kth = np.partition(u, k - 1, axis=1)[:, k - 1:k]
+    return u <= kth
 
 
 def _w_of(p: np.ndarray) -> np.ndarray:
@@ -81,13 +112,12 @@ def make_plan(kind: str, p: np.ndarray, t_rounds: int,
         # ``Generator.integers``' exclusive high end gives; p_i = 1 clients
         # then always get offset 0, i.e. train whenever selected
         # (regression-tested in test_fed_engine.py).
-        train = np.zeros((t_rounds, n), bool)
+        # vectorized: the loop's running counter at round t is the
+        # exclusive cumulative selection count (loop equality pinned in
+        # test_fed_engine.py).
         offsets = rng.integers(0, w)
-        counters = np.zeros(n, int)
-        for t in range(t_rounds):
-            due = (counters % w) == offsets
-            train[t] = sel[t] & due
-            counters += sel[t].astype(int)
+        counters = np.cumsum(sel, axis=0) - sel      # exclusive cumsum
+        train = sel & ((counters % w[None, :]) == offsets[None, :])
     elif kind == "adhoc":
         train = rng.random((t_rounds, n)) < p[None, :]
         train &= sel
@@ -98,13 +128,13 @@ def make_plan(kind: str, p: np.ndarray, t_rounds: int,
         train = np.where(p[None, :] >= 1.0, True, beat[:, None])
         train &= sel
     elif kind == "dropout":
+        # a client trains on its first quota_i selected rounds, then drops
+        # out — i.e. trains while its exclusive cumulative selection count
+        # is under quota (vectorized form of the loop's used-counter; loop
+        # equality pinned in test_fed_engine.py)
         quota = np.maximum(1, np.round(p * t_rounds)).astype(int)
-        used = np.zeros(n, int)
-        train = np.zeros((t_rounds, n), bool)
-        for t in range(t_rounds):
-            active = used < quota
-            train[t] = sel[t] & active
-            used += train[t].astype(int)
+        used = np.cumsum(sel, axis=0) - sel          # exclusive cumsum
+        train = sel & (used < quota[None, :])
         # dropped-out clients also leave aggregation entirely
         sel = train.copy()
     elif kind == "full":
@@ -115,5 +145,17 @@ def make_plan(kind: str, p: np.ndarray, t_rounds: int,
 
 
 def fednova_local_steps(p: np.ndarray, k_full: int) -> np.ndarray:
-    """FedNova spends the budget as fewer local iterations every round."""
+    """FedNova spends the budget as fewer local iterations every round.
+
+    Validates like :func:`make_plan`: budgets must satisfy 0 < p_i <= 1
+    (NaN rejected) and the full step count must be >= 1.
+    """
+    p = np.asarray(p, float)
+    if p.ndim != 1 or len(p) == 0:
+        raise ValueError(f"p must be a non-empty 1-D budget vector, got "
+                         f"shape {p.shape}")
+    if not ((p > 0) & (p <= 1)).all():     # also rejects NaN
+        raise ValueError("budgets must satisfy 0 < p_i <= 1")
+    if k_full < 1:
+        raise ValueError(f"k_full must be >= 1, got {k_full}")
     return np.maximum(1, np.round(p * k_full)).astype(np.int32)

@@ -66,6 +66,10 @@ class RoundCtx:
     #: mesh axis the client dimension is shard_map'ed over (sharded
     #: executor); None everywhere else. Aggregations must reduce across it.
     axis_name: str | None = None
+    #: per-client energy reserve at decision time (budget-policy engine);
+    #: None when the round runs from precomputed masks without a device
+    #: simulator. Strategies may condition estimation/weighting on it.
+    energy: jax.Array | None = None
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,18 @@
+"""Simulated client-device runtime (energy, load, duty cycles).
+
+The budget-policy engine (:mod:`repro.core.budget`) decides train-vs-
+estimate *inside* the traced round loop; this package supplies the device
+model those decisions condition on: per-client FLOPs rates, energy
+reserves with harvesting, stochastic background load and duty cycles —
+all advanced as pure-JAX state in the round carry.
+"""
+from repro.system.devices import (  # noqa: F401
+    DeviceProfile,
+    advance_devices,
+    device_awake,
+    init_device_state,
+    init_ledger,
+    make_profile,
+    stateless_uniform,
+    update_ledger,
+)

@@ -1,0 +1,209 @@
+"""Per-client device simulator: FLOPs rate, energy budget, background load.
+
+The resource-constrained-FL surveys (arXiv:2307.09182, arXiv:2002.10610)
+model clients as devices with a *rate* (how fast a local-training round
+runs), an *energy reserve* (drained by training, refilled by harvesting /
+charging) and a *time-varying background load* (other apps competing for
+the accelerator). CC-FedAvg's ad-hoc mode (§VI-A, Fig. 1b) has each client
+consult exactly this state when deciding train-vs-estimate every round —
+so the simulator lives *inside* the traced round loop:
+
+* :class:`DeviceProfile` — static per-client parameters, stacked along the
+  client axis like everything else in the vectorized engine;
+* device **state** — a ``{"energy", "load"}`` dict of per-client rows
+  advanced once per round by :func:`advance_devices` (pure JAX, safe under
+  ``jit``/``scan``/``shard_map``);
+* an energy/cost **ledger** — cumulative per-client accounting
+  (:func:`init_ledger`/:func:`update_ledger`) accumulated in-carry so a
+  checkpoint resume continues the books bit-identically.
+
+Randomness is *stateless*: background-load noise for client ``i`` in round
+``t`` derives from ``fold_in(fold_in(PRNGKey(seed), t), i)``, so a resumed
+run, a sharded cohort and a full-federation round all see identical draws
+(the same contract the plan masks and cohort sampler follow).
+
+Dynamics (one round):
+
+* ``load'   = clip(rho * load + (1 - rho) * load_mean + jitter * u, 0, 0.95)``
+  with ``u ~ U[-1, 1)`` — an AR(1) background load;
+* ``energy' = clip(energy - trained * train_cost + harvest, 0, capacity)``;
+* a device is *awake* in round ``t`` iff ``t % duty_period < duty_on``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: background load never reaches 1.0 — a fully-loaded device would imply an
+#: infinite round time in the deadline policy's estimate
+_LOAD_MAX = 0.95
+
+#: per-client array fields of a profile, in ``rows()`` order
+PROFILE_ROW_KEYS = ("budget", "flops_rate", "train_cost", "harvest",
+                    "capacity", "init_energy", "load_mean", "load_rho",
+                    "load_jitter", "duty_period", "duty_on")
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Static per-client device parameters (all arrays are (N,))."""
+
+    budget: jnp.ndarray       # p_i — the paper's computational budgets
+    flops_rate: jnp.ndarray   # relative device speed (1.0 = nominal)
+    train_cost: jnp.ndarray   # energy drained by one local-training round
+    harvest: jnp.ndarray      # energy recovered every round (charging)
+    capacity: jnp.ndarray     # energy reserve ceiling
+    init_energy: jnp.ndarray  # reserve at round 0
+    load_mean: jnp.ndarray    # stationary background load in [0, 0.95]
+    load_rho: jnp.ndarray     # AR(1) persistence in [0, 1)
+    load_jitter: jnp.ndarray  # load noise amplitude
+    duty_period: jnp.ndarray  # (N,) int32 — duty-cycle window length
+    duty_on: jnp.ndarray      # (N,) int32 — awake rounds per window
+    seed: int = 0             # stateless-noise stream id
+
+    @property
+    def n_clients(self) -> int:
+        return self.budget.shape[0]
+
+    def rows(self) -> dict:
+        """Per-client parameter rows as a plain dict — the gatherable view
+        the executors ``jnp.take`` per cohort (mirrors the history rows of
+        :mod:`repro.core.strategies`)."""
+        return {k: getattr(self, k) for k in PROFILE_ROW_KEYS}
+
+
+def make_profile(kind: str, p, *, capacity: float = 4.0,
+                 init_energy: float = 1.0, harvest_scale: float = 1.0,
+                 load_mean: float = 0.0, load_rho: float = 0.7,
+                 load_jitter: float = 0.0, duty_period: int = 1,
+                 duty_on: int = 1, seed: int = 0) -> DeviceProfile:
+    """Build a profile from the paper's budget vector ``p``.
+
+    Kinds:
+
+    * ``"budget"`` — heterogeneity follows p_i: device speed ∝ p_i and
+      energy harvest = ``harvest_scale · p_i`` per round, so a client can
+      *sustain* training a fraction ≈ p_i of rounds (the energy-reserve
+      translation of the paper's computational budget);
+    * ``"uniform"`` — every device is nominal-speed and harvests a full
+      training round's energy every round (energy never binds).
+
+    Energies are in units of one training round's cost (``train_cost = 1``).
+    """
+    p = np.asarray(p, float)
+    if p.ndim != 1 or len(p) == 0:
+        raise ValueError(f"p must be a non-empty 1-D budget vector, got "
+                         f"shape {p.shape}")
+    if not ((p > 0) & (p <= 1)).all():
+        raise ValueError("budgets must satisfy 0 < p_i <= 1")
+    n = len(p)
+    if kind == "budget":
+        flops_rate = p.copy()
+        harvest = harvest_scale * p
+    elif kind == "uniform":
+        flops_rate = np.ones(n)
+        harvest = np.ones(n)
+    else:
+        raise ValueError(f"unknown device profile kind {kind!r}; "
+                         "available: budget, uniform")
+    if capacity <= 0:
+        raise ValueError(f"capacity must be > 0, got {capacity}")
+    if not 0 <= load_mean <= _LOAD_MAX:
+        raise ValueError(f"load_mean must be in [0, {_LOAD_MAX}], "
+                         f"got {load_mean}")
+    if not 0 <= load_rho < 1:
+        raise ValueError(f"load_rho must be in [0, 1), got {load_rho}")
+    if duty_period < 1 or not 1 <= duty_on <= duty_period:
+        raise ValueError(
+            f"duty cycle needs 1 <= duty_on <= duty_period, got "
+            f"duty_on={duty_on}, duty_period={duty_period}")
+    f32 = lambda v: jnp.full((n,), v, jnp.float32)  # noqa: E731
+    return DeviceProfile(
+        budget=jnp.asarray(p, jnp.float32),
+        flops_rate=jnp.asarray(flops_rate, jnp.float32),
+        train_cost=f32(1.0),
+        harvest=jnp.asarray(harvest, jnp.float32),
+        capacity=f32(capacity),
+        init_energy=f32(min(init_energy, capacity)),
+        load_mean=f32(load_mean),
+        load_rho=f32(load_rho),
+        load_jitter=f32(load_jitter),
+        duty_period=jnp.full((n,), duty_period, jnp.int32),
+        duty_on=jnp.full((n,), duty_on, jnp.int32),
+        seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# traced state transitions
+# ---------------------------------------------------------------------------
+
+
+def init_device_state(profile: DeviceProfile) -> dict:
+    """Round-0 device state: full initial reserve, load at its mean."""
+    return {"energy": jnp.asarray(profile.init_energy, jnp.float32),
+            "load": jnp.asarray(profile.load_mean, jnp.float32)}
+
+
+def device_awake(rows: dict, rnd) -> jax.Array:
+    """Duty-cycle mask for round ``rnd`` (per-client bool)."""
+    return (rnd % rows["duty_period"]) < rows["duty_on"]
+
+
+def stateless_uniform(seed: int, rnd, client_ids: jax.Array,
+                      minval: float = 0.0, maxval: float = 1.0) -> jax.Array:
+    """Uniform noise keyed on (seed, round, ABSOLUTE client id) — identical
+    whether the client runs in a full round, a sharded cohort or a resumed
+    session. The single source of the determinism contract shared by the
+    device simulator and the stochastic budget policies."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(client_ids)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, minval=minval, maxval=maxval))(keys)
+
+
+def advance_devices(rows: dict, dev: dict, trained: jax.Array, rnd,
+                    client_ids: jax.Array, seed: int) -> dict:
+    """One round of device dynamics: drain trainers, harvest, evolve load.
+
+    ``rows`` are (gathered) profile rows, ``trained`` the sel∧train mask of
+    clients that actually spent a training round's energy.
+    """
+    u = stateless_uniform(seed, rnd, client_ids, minval=-1.0, maxval=1.0)
+    load = jnp.clip(
+        rows["load_rho"] * dev["load"]
+        + (1.0 - rows["load_rho"]) * rows["load_mean"]
+        + rows["load_jitter"] * u,
+        0.0, _LOAD_MAX)
+    energy = jnp.clip(
+        dev["energy"] - trained.astype(jnp.float32) * rows["train_cost"]
+        + rows["harvest"],
+        0.0, rows["capacity"])
+    return {"energy": energy, "load": load}
+
+
+# ---------------------------------------------------------------------------
+# energy/cost ledger (accumulated in-carry)
+# ---------------------------------------------------------------------------
+
+
+def init_ledger(n_clients: int) -> dict:
+    """Per-client cumulative books: energy spent, train/estimate rounds."""
+    return {"energy_spent": jnp.zeros((n_clients,), jnp.float32),
+            "train_rounds": jnp.zeros((n_clients,), jnp.int32),
+            "est_rounds": jnp.zeros((n_clients,), jnp.int32)}
+
+
+def update_ledger(ledger: dict, rows: dict, sel_mask: jax.Array,
+                  train_mask: jax.Array) -> dict:
+    """Accumulate one round (pure; safe inside scan/shard_map)."""
+    trained = (sel_mask & train_mask)
+    estimated = (sel_mask & ~train_mask)
+    return {
+        "energy_spent": ledger["energy_spent"]
+        + trained.astype(jnp.float32) * rows["train_cost"],
+        "train_rounds": ledger["train_rounds"] + trained.astype(jnp.int32),
+        "est_rounds": ledger["est_rounds"] + estimated.astype(jnp.int32),
+    }

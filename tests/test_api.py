@@ -22,7 +22,8 @@ from repro.api import (Callback, CheckpointCallback, ExperimentSpec,
                        format_table, run_sweep)
 from repro.api.cli import main as cli_main
 from repro.checkpoint.store import (CheckpointManager, FED_STATE_KEYS,
-                                    load_fed_state, save_fed_state)
+                                    POLICY_STATE_KEYS, load_fed_state,
+                                    save_fed_state)
 from repro.core.engine import run_federated
 from repro.core.rounds import init_fed_state
 
@@ -133,6 +134,50 @@ def test_resume_matches_uninterrupted(tmp_path, strategy, executor):
     resumed.run()
     assert resumed.metrics.history == full.metrics.history
     assert_states_equal(resumed.state, full.state)
+
+
+@pytest.mark.parametrize("policy", ["energy", "adaptive", "deadline"])
+@pytest.mark.parametrize("executor", ["scan", "python"])
+def test_resume_stateful_policy_matches_uninterrupted(tmp_path, policy,
+                                                      executor):
+    """Runtime policies carry live state (policy rows, device energy/load,
+    ledger) in the round carry; a mid-span save/restore must continue
+    bit-identically — including the books."""
+    spec = small_spec(policy=policy, executor=executor, rounds=10,
+                      eval_every=3, load_mean=0.3, load_jitter=0.2,
+                      energy_init=1.0)
+    full = Session.from_spec(spec).run()
+
+    part = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    part.run(4)                       # mid-span interrupt (3 < 4 < 6)
+    part.save()
+    del part
+
+    resumed = Session.restore_from(str(tmp_path))
+    assert resumed.t == 4
+    resumed.run()
+    assert resumed.metrics.history == full.metrics.history
+    assert_states_equal(resumed.state, full.state,
+                        keys=FED_STATE_KEYS + POLICY_STATE_KEYS)
+
+
+def test_policy_state_rides_checkpoints(tmp_path):
+    """The checkpoint file itself carries the policy/device/ledger rows
+    (not just the base fed state), and save_fed_state refuses a policy-mode
+    state that lost some of them."""
+    spec = small_spec(policy="energy", rounds=4, eval_every=4)
+    sess = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    sess.run()
+    path = sess.save()
+    import numpy as _np
+    with _np.load(path) as z:
+        keys = set(z.files)
+    assert any(k.startswith("ledger/") for k in keys)
+    assert any(k.startswith("device/") for k in keys)
+    state = dict(sess.state)
+    state.pop("ledger")
+    with pytest.raises(ValueError, match="policy-mode"):
+        save_fed_state(str(tmp_path / "bad.npz"), state)
 
 
 def test_resume_restores_metric_history(tmp_path):

@@ -1,0 +1,355 @@
+"""Budget-policy engine: device simulator semantics, policy decisions,
+ledger accounting, spec/CLI wiring.
+
+The bit-for-bit PrecompiledPolicy × executor matrix lives in
+``tests/test_executor_matrix.py``; stateful-policy resume pins live in
+``tests/test_api.py``. This file covers the layer itself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, Session
+from repro.core.budget import (AdaptiveProbability, BudgetCtx,
+                               DeadlineAware, EnergyAware,
+                               PrecompiledPolicy, available_policies,
+                               budget_ctx, make_policy)
+from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_policy_round_fn,
+                               make_policy_span_runner)
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+from repro.system.devices import (advance_devices, device_awake,
+                                  init_device_state, init_ledger,
+                                  make_profile, update_ledger)
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, N, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    return model, fd
+
+
+# ---------------------------------------------------------------------------
+# device simulator
+# ---------------------------------------------------------------------------
+
+
+def test_profile_budget_kind_maps_p_to_harvest():
+    p = np.array([1.0, 0.5, 0.25, 0.125])
+    prof = make_profile("budget", p, harvest_scale=1.0)
+    np.testing.assert_allclose(np.asarray(prof.harvest), p)
+    np.testing.assert_allclose(np.asarray(prof.flops_rate), p)
+    np.testing.assert_allclose(np.asarray(prof.train_cost), 1.0)
+    assert prof.n_clients == N
+    rows = prof.rows()
+    assert set(rows) >= {"budget", "train_cost", "harvest", "capacity"}
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError, match="budgets"):
+        make_profile("budget", np.array([0.0, 0.5]))
+    with pytest.raises(ValueError, match="budgets"):
+        make_profile("budget", np.array([np.nan]))
+    with pytest.raises(ValueError, match="unknown device profile"):
+        make_profile("solar", np.array([0.5]))
+    with pytest.raises(ValueError, match="capacity"):
+        make_profile("uniform", np.array([0.5]), capacity=0.0)
+    with pytest.raises(ValueError, match="load_rho"):
+        make_profile("uniform", np.array([0.5]), load_rho=1.0)
+    with pytest.raises(ValueError, match="duty"):
+        make_profile("uniform", np.array([0.5]), duty_period=2, duty_on=3)
+
+
+def test_energy_drains_harvests_and_clips():
+    p = np.array([1.0, 0.5])
+    prof = make_profile("budget", p, capacity=2.0, init_energy=1.0)
+    rows, ids = prof.rows(), jnp.arange(2)
+    dev = init_device_state(prof)
+    # round 0: client 0 trains (cost 1, harvest 1 -> back to 1.0);
+    # client 1 idles (harvest 0.5 -> 1.5)
+    dev = advance_devices(rows, dev, jnp.asarray([True, False]),
+                          jnp.asarray(0), ids, prof.seed)
+    np.testing.assert_allclose(np.asarray(dev["energy"]), [1.0, 1.5])
+    # idle forever: reserves clip at capacity
+    for t in range(1, 6):
+        dev = advance_devices(rows, dev, jnp.zeros(2, bool),
+                              jnp.asarray(t), ids, prof.seed)
+    np.testing.assert_allclose(np.asarray(dev["energy"]), [2.0, 2.0])
+
+
+def test_energy_never_negative():
+    prof = make_profile("budget", np.array([0.1]), init_energy=0.2)
+    dev = init_device_state(prof)
+    dev = advance_devices(prof.rows(), dev, jnp.asarray([True]),
+                          jnp.asarray(0), jnp.arange(1), prof.seed)
+    assert float(dev["energy"][0]) >= 0.0
+
+
+def test_load_noise_is_stateless_and_shard_consistent():
+    """Noise keys on (seed, round, ABSOLUTE client id): advancing a gathered
+    half-cohort produces exactly the rows of the full advance."""
+    p = np.full(N, 0.5)
+    prof = make_profile("budget", p, load_mean=0.3, load_jitter=0.2,
+                        load_rho=0.5, seed=7)
+    rows, dev = prof.rows(), init_device_state(prof)
+    full = advance_devices(rows, dev, jnp.zeros(N, bool), jnp.asarray(3),
+                           jnp.arange(N), prof.seed)
+    idx = jnp.asarray([1, 3])
+    take = lambda t: jax.tree.map(lambda x: x[idx], t)  # noqa: E731
+    part = advance_devices(take(rows), take(dev), jnp.zeros(2, bool),
+                           jnp.asarray(3), idx, prof.seed)
+    np.testing.assert_array_equal(np.asarray(full["load"])[np.asarray(idx)],
+                                  np.asarray(part["load"]))
+
+
+def test_duty_cycle_mask():
+    prof = make_profile("uniform", np.ones(2), duty_period=3, duty_on=1)
+    rows = prof.rows()
+    awake = [bool(device_awake(rows, jnp.asarray(t))[0]) for t in range(6)]
+    assert awake == [True, False, False, True, False, False]
+
+
+def test_ledger_accumulates_and_prices_energy():
+    prof = make_profile("budget", np.array([1.0, 0.5]))
+    rows = prof.rows()
+    led = init_ledger(2)
+    sel = jnp.asarray([True, True])
+    led = update_ledger(led, rows, sel, jnp.asarray([True, False]))
+    led = update_ledger(led, rows, sel, jnp.asarray([True, True]))
+    led = update_ledger(led, rows, jnp.asarray([False, True]),
+                        jnp.asarray([True, True]))     # 0 unselected
+    np.testing.assert_array_equal(np.asarray(led["train_rounds"]), [2, 2])
+    np.testing.assert_array_equal(np.asarray(led["est_rounds"]), [0, 1])
+    np.testing.assert_allclose(np.asarray(led["energy_spent"]), [2.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# policy decisions
+# ---------------------------------------------------------------------------
+
+
+def _ctx(prof, dev=None, rnd=0, sel=None):
+    n = prof.n_clients
+    return budget_ctx(prof.rows(), dev or init_device_state(prof),
+                      jnp.asarray(rnd), jnp.arange(n),
+                      jnp.ones(n, bool) if sel is None else sel,
+                      prof.seed)
+
+
+def test_precompiled_policy_replays_table():
+    plan = make_plan("round_robin", np.array([1.0, 0.5, 0.25]), 8, seed=1)
+    pol = PrecompiledPolicy.from_plan(plan)
+    prof = make_profile("budget", plan.p)
+    for t in range(8):
+        mask, _ = pol.decide({}, _ctx(prof, rnd=t))
+        np.testing.assert_array_equal(np.asarray(mask), plan.training[t])
+
+
+def test_precompiled_policy_requires_table():
+    with pytest.raises(ValueError, match="table"):
+        PrecompiledPolicy()
+    with pytest.raises(ValueError, match="plan"):
+        make_policy("precompiled")
+
+
+def test_energy_aware_trains_iff_reserve_covers_cost():
+    prof = make_profile("budget", np.array([1.0, 0.5, 0.25]),
+                        init_energy=1.0)
+    pol = EnergyAware()
+    dev = init_device_state(prof)
+    mask, _ = pol.decide({}, _ctx(prof, dev=dev))
+    np.testing.assert_array_equal(np.asarray(mask), [True, True, True])
+    dev = {"energy": jnp.asarray([1.0, 0.5, 0.99]), "load": dev["load"]}
+    mask, _ = pol.decide({}, _ctx(prof, dev=dev))
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, False])
+
+
+def test_energy_aware_sustains_budget_fraction(setup):
+    """With the 'budget' profile (harvest = p·cost), EnergyAware's realized
+    training fraction over a long horizon approaches p_i — the energy
+    translation of the paper's computational budget."""
+    model, fd = setup
+    p = np.array([1.0, 0.5, 0.25, 0.125])
+    prof = make_profile("budget", p, init_energy=1.0)
+    fed = FedConfig(strategy="cc", local_steps=1, batch_size=8, lr=0.05)
+    run = make_policy_span_runner(model, fd, fed, EnergyAware(), prof)
+    state = init_fed_state(jax.random.PRNGKey(0), model, N,
+                           policy=EnergyAware(), profile=prof)
+    t = 64
+    state = run(state, jnp.ones((t, N), bool),
+                jnp.full((N,), 1, jnp.int32))
+    frac = np.asarray(state["ledger"]["train_rounds"]) / t
+    np.testing.assert_allclose(frac, p, atol=0.05)
+
+
+def test_deadline_aware_drops_slow_or_loaded_devices():
+    p = np.array([1.0, 0.5, 1.0])
+    prof = make_profile("budget", p)
+    pol = DeadlineAware(deadline=1.5)
+    dev = init_device_state(prof)
+    # client 1's nominal time = 1/0.5 = 2 > 1.5; client 2 gets 60% load
+    dev = {"energy": dev["energy"],
+           "load": jnp.asarray([0.0, 0.0, 0.6])}
+    mask, _ = pol.decide({}, _ctx(prof, dev=dev))
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, False])
+    with pytest.raises(ValueError, match="deadline"):
+        DeadlineAware(deadline=0.0)
+
+
+def test_adaptive_probability_matches_budget_in_expectation():
+    p = np.full(1, 0.4)
+    prof = make_profile("budget", p, seed=5)
+    pol = AdaptiveProbability(eta=0.5)
+    rows = pol.init_rows(1)
+    trained = 0
+    t = 400
+    for rnd in range(t):
+        mask, rows = pol.decide(rows, _ctx(prof, rnd=rnd))
+        trained += int(mask[0])
+    assert abs(trained / t - 0.4) < 0.1
+    # the rows carried the realized counts
+    assert float(rows["seen"][0]) == t
+    assert float(rows["trained"][0]) == trained
+    with pytest.raises(ValueError, match="eta"):
+        AdaptiveProbability(eta=-0.1)
+
+
+def test_adaptive_catches_up_after_forced_skips():
+    """Feedback: a client that slept below its budget raises its effective
+    probability above a memoryless coin."""
+    p = np.full(1, 0.5)
+    prof = make_profile("budget", p, seed=3)
+    pol = AdaptiveProbability(eta=10.0)       # aggressive feedback
+    rows = {"trained": jnp.zeros((1,)), "seen": jnp.full((1,), 10.0)}
+    mask, _ = pol.decide(rows, _ctx(prof, rnd=0))
+    assert bool(mask[0])                      # p_eff clipped to 1 ⇒ trains
+
+
+def test_make_policy_factory_and_registry():
+    assert set(available_policies()) == {"precompiled", "energy",
+                                         "deadline", "adaptive"}
+    assert make_policy("energy").name == "energy"
+    assert make_policy("deadline", deadline=1.0).deadline == 1.0
+    assert make_policy("adaptive", eta=0.2).eta == 0.2
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("psychic")
+
+
+# ---------------------------------------------------------------------------
+# executor integration
+# ---------------------------------------------------------------------------
+
+
+def test_policy_mode_requires_matching_profile(setup):
+    model, fd = setup
+    small = make_profile("budget", np.array([0.5]))
+    with pytest.raises(ValueError, match="profile"):
+        make_policy_round_fn(model, fd, FedConfig(strategy="cc"),
+                             EnergyAware(), small)
+    with pytest.raises(ValueError, match="policy"):
+        init_fed_state(jax.random.PRNGKey(0), model, N,
+                       policy=EnergyAware())
+
+
+def test_energy_policy_session_end_to_end():
+    """An EnergyAware session runs under every non-sharded executor and its
+    ledger/device state are self-consistent."""
+    spec = ExperimentSpec(
+        dataset="gaussian", n_samples=256, dim=8, n_classes=4, n_clients=N,
+        budget="power", beta=2, model="mlp", width=4, strategy="cc",
+        local_steps=2, batch_size=16, lr=0.1, schedule="adhoc", rounds=8,
+        eval_every=4, seed=0, policy="energy", energy_init=1.0)
+    sess = Session.from_spec(spec).run()
+    led = sess.ledger()
+    decided = led["train_rounds"] + led["est_rounds"]
+    np.testing.assert_array_equal(decided, np.full(N, 8))
+    np.testing.assert_allclose(led["energy_spent"], led["train_rounds"])
+    s = sess.summary()
+    assert s["policy"] == "energy"
+    assert 0.0 < s["train_fraction"] <= 1.0
+    assert 0.0 <= s["test_acc"] <= 1.0
+
+
+def test_policy_decisions_respect_selection_mask(setup):
+    """Unselected clients never train, never pay energy, never enter the
+    ledger — under any policy."""
+    model, fd = setup
+    p = np.ones(N)
+    prof = make_profile("uniform", p)
+    fed = FedConfig(strategy="cc", local_steps=1, batch_size=8, lr=0.05)
+    run = make_policy_span_runner(model, fd, fed, EnergyAware(), prof)
+    state = init_fed_state(jax.random.PRNGKey(0), model, N,
+                           policy=EnergyAware(), profile=prof)
+    sel = jnp.asarray(np.tile([True, True, False, False], (6, 1)))
+    state = run(state, sel, jnp.full((N,), 1, jnp.int32))
+    led = jax.device_get(state["ledger"])
+    np.testing.assert_array_equal(led["train_rounds"], [6, 6, 0, 0])
+    np.testing.assert_array_equal(led["est_rounds"], [0, 0, 0, 0])
+    np.testing.assert_allclose(led["energy_spent"], [6, 6, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# spec / CLI wiring
+# ---------------------------------------------------------------------------
+
+
+def test_spec_policy_fields_round_trip():
+    spec = ExperimentSpec(policy="deadline", deadline=1.25,
+                          device_profile="uniform", load_mean=0.2,
+                          load_jitter=0.1)
+    back = ExperimentSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert back.policy == "deadline" and back.deadline == 1.25
+
+
+def test_spec_rejects_bad_policy_fields():
+    with pytest.raises(ValueError, match="policy"):
+        ExperimentSpec(policy="psychic")
+    with pytest.raises(ValueError, match="device_profile"):
+        ExperimentSpec(device_profile="solar")
+    with pytest.raises(ValueError, match="energy_capacity"):
+        ExperimentSpec(energy_capacity=0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        ExperimentSpec(deadline=-1.0)
+    with pytest.raises(ValueError, match="adapt_eta"):
+        ExperimentSpec(adapt_eta=-0.5)
+
+
+def test_spec_v1_dicts_still_load():
+    """Pre-policy (v1) spec files carry no policy fields; defaults apply."""
+    d = ExperimentSpec().to_dict()
+    for k in ("policy", "device_profile", "energy_capacity", "energy_init",
+              "harvest_scale", "load_mean", "load_rho", "load_jitter",
+              "deadline", "adapt_eta"):
+        d.pop(k)
+    d["spec_version"] = 1
+    spec = ExperimentSpec.from_dict(d)
+    assert spec.policy == "precompiled"
+
+
+def test_cli_policy_flag(tmp_path, capsys):
+    import json
+    from repro.api.cli import main as cli_main
+    spec_path = str(tmp_path / "spec.json")
+    cli_main(["init", spec_path, "--set", "rounds=3",
+              "--set", "eval_every=3", "--set", "n_samples=256",
+              "--set", "dim=8", "--set", "n_classes=4",
+              "--set", "n_clients=4", "--set", "width=4",
+              "--set", "local_steps=2"])
+    capsys.readouterr()
+    assert cli_main(["run", spec_path, "--policy", "energy",
+                     "--device-profile", "budget", "--quiet"]) == 0
+    summary = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert summary["policy"] == "energy"
+    assert summary["rounds_done"] == 3

@@ -24,9 +24,13 @@ import numpy as np
 import pytest
 
 from repro.api import ExperimentSpec, Session
-from repro.core.rounds import (FedConfig, init_fed_state, make_round_fn,
-                               make_sharded_span_runner)
+from repro.core.budget import EnergyAware, PrecompiledPolicy
+from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_policy_round_fn,
+                               make_policy_span_runner, make_round_fn,
+                               make_sharded_span_runner, make_span_runner)
 from repro.core.schedules import make_plan
+from repro.system.devices import make_profile
 from repro.core.strategies import available_strategies, get_strategy
 from repro.data.federated import CohortSampler, build_federated
 from repro.data.partition import budget_law, partition_gamma
@@ -88,6 +92,129 @@ def test_matrix_covers_every_registered_strategy():
     covered the moment it registers."""
     assert set(available_strategies()) >= {
         "fedavg", "dropout", "s1", "s2", "cc", "ccc", "fednova", "cc_decay"}
+
+
+# ---------------------------------------------------------------------------
+# budget-policy engine: PrecompiledPolicy ≡ legacy masks, bit-for-bit
+# ---------------------------------------------------------------------------
+
+SCHEDULE_KINDS = ("round_robin", "adhoc", "sync", "dropout", "full")
+
+
+@pytest.fixture(scope="module")
+def policy_setup():
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, N, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    return model, fd
+
+
+@pytest.mark.parametrize("kind", SCHEDULE_KINDS)
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
+    """The acceptance pin of the budget-policy engine: replaying a legacy
+    plan through ``PrecompiledPolicy`` reproduces the mask-mode executor
+    EXACTLY (``assert_array_equal``, not allclose) for every schedule kind
+    under every executor — the static-plan era is a strict special case."""
+    model, fd = policy_setup
+    fed = FedConfig(strategy="cc", local_steps=2, batch_size=16, lr=0.1)
+    p = budget_law(N, beta=2)
+    rounds = 6
+    plan = make_plan(kind, p, rounds, seed=2)
+    k = jnp.full((N,), fed.local_steps, jnp.int32)
+    sel, train = jnp.asarray(plan.selection), jnp.asarray(plan.training)
+    policy = PrecompiledPolicy.from_plan(plan)
+    profile = make_profile("budget", p, seed=0)
+
+    def fresh(**kw):
+        return init_fed_state(jax.random.PRNGKey(0), model, N, **kw)
+
+    if executor == "python":
+        rf = make_round_fn(model, fd, fed)
+        s_mask = fresh()
+        for t in range(rounds):
+            s_mask = rf(s_mask, sel[t], train[t], k)
+        prf = make_policy_round_fn(model, fd, fed, policy, profile)
+        s_pol = fresh(policy=policy, profile=profile)
+        for t in range(rounds):
+            s_pol = prf(s_pol, sel[t], k)
+    elif executor in ("scan", "fused"):
+        fused = executor == "fused"
+        s_mask = make_span_runner(model, fd, fed, fused=fused)(
+            fresh(), sel, train, k)
+        s_pol = make_policy_span_runner(model, fd, fed, policy, profile,
+                                        fused=fused)(
+            fresh(policy=policy, profile=profile), sel, k)
+    else:                                        # sharded
+        idx = jnp.asarray(CohortSampler(N, 2, seed=3).indices(rounds))
+        s_mask = make_sharded_span_runner(model, fd, fed, cohort_size=2)(
+            fresh(), sel, train, k, idx)
+        s_pol = make_sharded_span_runner(
+            model, fd, fed, cohort_size=2, policy=policy,
+            profile=profile)(fresh(policy=policy, profile=profile),
+                             sel, k, idx)
+
+    for key in ("params", "deltas", "prev_local", "trained_ever"):
+        for a, b in zip(jax.tree.leaves(s_mask[key]),
+                        jax.tree.leaves(s_pol[key])):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{kind}/{executor}/{key} not bit-identical")
+
+
+@pytest.mark.parametrize("policy_name", ["energy", "adaptive"])
+def test_sharded_stateful_policy_equals_masked_full_round(policy_setup,
+                                                          policy_name):
+    """A sampled-cohort *policy* round must equal the full-federation
+    policy round whose selection mask is zeroed outside the cohort —
+    including the carried device state, policy rows and ledger: off-cohort
+    devices keep harvesting and their load keeps evolving (like unselected
+    clients of a full round), they just never train or enter the books."""
+    from repro.core.budget import make_policy
+    model, fd = policy_setup
+    fed = FedConfig(strategy="cc", local_steps=2, batch_size=16, lr=0.1)
+    p = budget_law(N, beta=2)
+    profile = make_profile("budget", p, load_jitter=0.2, load_mean=0.3,
+                           init_energy=1.0, seed=1)
+    policy = make_policy(policy_name)
+    rounds = 6
+    k = jnp.full((N,), fed.local_steps, jnp.int32)
+    sel = jnp.ones((rounds, N), bool)
+    idx_tab = CohortSampler(N, 2, seed=3).indices(rounds)
+
+    run = make_sharded_span_runner(model, fd, fed, cohort_size=2,
+                                   policy=policy, profile=profile)
+    s_cohort = run(init_fed_state(jax.random.PRNGKey(0), model, N,
+                                  policy=policy, profile=profile),
+                   sel, k, jnp.asarray(idx_tab))
+
+    member = np.zeros((rounds, N), bool)
+    for t in range(rounds):
+        member[t, idx_tab[t]] = True
+    ref_run = make_policy_span_runner(model, fd, fed, policy, profile)
+    s_ref = ref_run(init_fed_state(jax.random.PRNGKey(0), model, N,
+                                   policy=policy, profile=profile),
+                    jnp.asarray(member), k)
+
+    for key in ("params", "deltas", "prev_local", "trained_ever",
+                "policy", "device", "ledger"):
+        for a, b in zip(jax.tree.leaves(s_cohort[key]),
+                        jax.tree.leaves(s_ref[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+    led = jax.device_get(s_cohort["ledger"])
+    # off-cohort rounds never enter the books
+    assert (led["train_rounds"] + led["est_rounds"]
+            == member.sum(axis=0)).all()
+
+
+def test_sharded_rejects_half_policy_mode(policy_setup):
+    model, fd = policy_setup
+    with pytest.raises(ValueError, match="policy"):
+        make_sharded_span_runner(model, fd, FedConfig(strategy="cc"),
+                                 policy=EnergyAware())
 
 
 # ---------------------------------------------------------------------------

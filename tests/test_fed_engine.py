@@ -157,6 +157,23 @@ def test_fednova_local_steps_scale_with_budget():
     assert list(k) == [8, 4, 2, 1]
 
 
+def test_fednova_local_steps_validates_inputs():
+    """Same contract as make_plan: budgets in (0, 1] (NaN rejected), at
+    least one full local step."""
+    with pytest.raises(ValueError, match="budgets"):
+        fednova_local_steps(np.array([0.0, 0.5]), 8)
+    with pytest.raises(ValueError, match="budgets"):
+        fednova_local_steps(np.array([1.5]), 8)
+    with pytest.raises(ValueError, match="budgets"):
+        fednova_local_steps(np.array([np.nan]), 8)
+    with pytest.raises(ValueError, match="1-D"):
+        fednova_local_steps(np.array([]), 8)
+    with pytest.raises(ValueError, match="k_full"):
+        fednova_local_steps(np.array([0.5]), 0)
+    with pytest.raises(ValueError, match="k_full"):
+        fednova_local_steps(np.array([0.5]), -3)
+
+
 @pytest.mark.slow
 def test_end_to_end_cc_learns(setup):
     model, fd, te = setup
@@ -276,6 +293,121 @@ def test_plan_compute_fraction_tracks_budget(kind):
         assert 0.0 < frac <= p.mean() + 1e-9
     else:
         assert abs(frac - p.mean()) < 0.12
+
+
+# ---------------------------------------------------------------------------
+# vectorized plans == seed-era per-round loops (bit-for-bit, across seeds)
+# ---------------------------------------------------------------------------
+
+
+def _loop_server_selection(rng, t_rounds, n, ratio):
+    """Per-round loop formulation of ``server_selection``: one uniform row
+    per round, k smallest selected. ``Generator.random((T, N))`` fills
+    row-major, so the loop consumes the identical stream. (This pins the
+    vectorization against its own loop form; the seed-era ``rng.choice``
+    loop drew a different stream — see the ``server_selection`` note.)"""
+    if ratio >= 1.0:
+        return np.ones((t_rounds, n), bool)
+    k = max(1, int(round(ratio * n)))
+    sel = np.zeros((t_rounds, n), bool)
+    for t in range(t_rounds):
+        u = rng.random(n)
+        kth = np.partition(u, k - 1)[k - 1]
+        sel[t] = u <= kth
+    return sel
+
+
+def _loop_round_robin(sel, w, offsets):
+    """Seed-era counter loop (verbatim pre-vectorization logic)."""
+    t_rounds, n = sel.shape
+    train = np.zeros((t_rounds, n), bool)
+    counters = np.zeros(n, int)
+    for t in range(t_rounds):
+        due = (counters % w) == offsets
+        train[t] = sel[t] & due
+        counters += sel[t].astype(int)
+    return train
+
+
+def _loop_dropout(sel, quota):
+    """Seed-era quota loop (verbatim pre-vectorization logic)."""
+    t_rounds, n = sel.shape
+    used = np.zeros(n, int)
+    train = np.zeros((t_rounds, n), bool)
+    for t in range(t_rounds):
+        active = used < quota
+        train[t] = sel[t] & active
+        used += train[t].astype(int)
+    return train
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("ratio", [0.3, 0.5, 0.9])
+def test_vectorized_server_selection_equals_loop(seed, ratio):
+    from repro.core.schedules import server_selection
+    n, t = 17, 40
+    vec = server_selection(np.random.default_rng(seed), t, n, ratio)
+    loop = _loop_server_selection(np.random.default_rng(seed), t, n, ratio)
+    np.testing.assert_array_equal(vec, loop)
+    k = max(1, round(ratio * n))
+    assert (vec.sum(axis=1) == k).all()
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("ratio", [1.0, 0.6])
+def test_vectorized_round_robin_equals_loop(seed, ratio):
+    """The cumulative-sum formulation reproduces the per-round counter loop
+    exactly — same selection, same offsets draw, same training bits."""
+    from repro.core.schedules import _w_of, server_selection
+    p = np.array([1.0, 0.5, 0.25, 0.2, 0.125])
+    t = 50
+    plan = make_plan("round_robin", p, t, participation_ratio=ratio,
+                     seed=seed)
+    # replay the rng consumption order of make_plan: selection, then offsets
+    rng = np.random.default_rng(seed)
+    sel = server_selection(rng, t, len(p), ratio)
+    w = _w_of(p)
+    offsets = rng.integers(0, w)
+    np.testing.assert_array_equal(plan.training,
+                                  _loop_round_robin(sel, w, offsets))
+    np.testing.assert_array_equal(plan.selection, sel)
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("ratio", [1.0, 0.6])
+def test_vectorized_dropout_equals_loop(seed, ratio):
+    from repro.core.schedules import server_selection
+    p = np.array([1.0, 0.5, 0.25, 0.07])
+    t = 60
+    plan = make_plan("dropout", p, t, participation_ratio=ratio, seed=seed)
+    rng = np.random.default_rng(seed)
+    sel = server_selection(rng, t, len(p), ratio)
+    quota = np.maximum(1, np.round(p * t)).astype(int)
+    train = _loop_dropout(sel, quota)
+    np.testing.assert_array_equal(plan.training, train)
+    # dropout: exhausted clients leave selection too
+    np.testing.assert_array_equal(plan.selection, train)
+
+
+def test_compute_fraction_per_client_breakdown():
+    p = np.array([1.0, 0.5, 0.25])
+    plan = make_plan("round_robin", p, 200, seed=0)
+    per_client = plan.compute_fraction(per_client=True)
+    assert per_client.shape == (3,)
+    np.testing.assert_allclose(per_client, p, atol=0.05)
+    # the scalar is the selection-weighted aggregate of the breakdown
+    total = plan.compute_fraction()
+    sel_counts = plan.selection.sum(axis=0)
+    np.testing.assert_allclose(
+        total, (per_client * sel_counts).sum() / sel_counts.sum())
+
+
+def test_cost_report_carries_per_client_breakdown():
+    p = np.array([1.0, 0.25])
+    plan = make_plan("round_robin", p, 100, seed=1)
+    rep = cost_report(plan, 1000)
+    np.testing.assert_allclose(rep["compute_frac_per_client"],
+                               plan.compute_fraction(per_client=True))
 
 
 def test_make_plan_validates_inputs():
