@@ -1,0 +1,164 @@
+"""Hierarchical two-tier executor — client-rounds/s vs edge count/period.
+
+The two-tier executor routes every round through the edge tier: clients
+train against their edge aggregator's model, edges aggregate their own
+blocks, and every ``edge_period``-th round all-gathers the uploads for
+the server merge. This benchmark sweeps the edge count E and the edge
+period P against the flat scan executor (the single-program reference)
+and reports client-rounds per second, plus the hierarchy overhead ratio
+(hier time / flat time) per cell.
+
+Emits machine-readable results to ``BENCH_hierarchy.json`` (``--json`` to
+change the path, empty string to disable). CI smoke-runs it on a
+4-virtual-device host mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``) with
+``--max-overhead`` as a regression budget on the E=1 collapse cell —
+structurally the flat round plus the edge-tier bookkeeping, so its
+overhead is the pure cost of the hierarchy machinery.
+
+    PYTHONPATH=src python benchmarks/hierarchy.py [--clients 64]
+        [--edges 1,2,4,8] [--periods 1,5] [--rounds 30] [--reps 3]
+        [--max-overhead 1.5]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hierarchy import EdgeTopology
+from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_hierarchical_span_runner,
+                               make_span_runner)
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.launch.mesh import best_edge_shards
+from repro.models.simple import make_classifier
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--edges", default="1,2,4,8",
+                    help="comma-separated edge counts to sweep")
+    ap.add_argument("--periods", default="1,5",
+                    help="comma-separated edge periods to sweep")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--max-overhead", type=float, default=0.0,
+                    help="fail (exit 1) if the E=1 cell's time exceeds "
+                         "this multiple of the flat scan path (0 = "
+                         "report only)")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_hierarchy.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+    edge_counts = [int(e) for e in args.edges.split(",") if e]
+    periods = [int(p) for p in args.periods.split(",") if p]
+
+    n = args.clients
+    ds = make_dataset("teacher", n=4096, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    parts = partition_gamma(tr, n, gamma=0.5, seed=0)
+    fd = build_federated(tr, parts)
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    plan = make_plan("adhoc", budget_law(n, beta=4), args.rounds, seed=0)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=32, lr=0.1)
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+
+    n_dev = len(jax.devices())
+    print(f"clients={n} rounds={args.rounds} devices={n_dev} "
+          f"(best of {args.reps})")
+
+    # flat scan executor: the single-program reference
+    runner = make_span_runner(model, fd, fed)
+    _block(runner(init_fed_state(jax.random.PRNGKey(0), model, n),
+                  sel, train, k))
+    t_flat = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, n)
+        t0 = time.perf_counter()
+        _block(runner(state, sel, train, k))
+        t_flat.append(time.perf_counter() - t0)
+    flat_s = min(t_flat)
+    flat_cps = n * args.rounds / flat_s
+    print(f"flat scan:              {flat_s * 1e3:8.1f} ms "
+          f"({flat_cps:9.1f} client-rounds/s)")
+
+    rows, e1_overhead = [], None
+    for e in edge_counts:
+        if e > n:
+            print(f"edges {e} > clients {n}, skipping")
+            continue
+        for period in periods:
+            topo = EdgeTopology.contiguous(n, e, edge_period=period)
+            shards = best_edge_shards(e)
+            hier = make_hierarchical_span_runner(model, fd, fed, topo)
+            s0 = init_fed_state(jax.random.PRNGKey(0), model, n,
+                                topology=topo)
+            _block(hier(s0, sel, train, k))
+            times = []
+            for _ in range(args.reps):
+                state = init_fed_state(jax.random.PRNGKey(0), model, n,
+                                       topology=topo)
+                t0 = time.perf_counter()
+                _block(hier(state, sel, train, k))
+                times.append(time.perf_counter() - t0)
+            best = min(times)
+            cps = n * args.rounds / best
+            overhead = best / flat_s
+            if e == 1:
+                e1_overhead = (overhead if e1_overhead is None
+                               else min(e1_overhead, overhead))
+            rows.append({"n_edges": e, "edge_period": period,
+                         "shards": shards, "total_s": best,
+                         "ms_per_round": best / args.rounds * 1e3,
+                         "clients_per_second": cps,
+                         "overhead_vs_flat": overhead})
+            print(f"hier E={e:3d} P={period:3d} ({shards} shard"
+                  f"{'s'[:shards > 1]}): {best * 1e3:8.1f} ms "
+                  f"({cps:9.1f} client-rounds/s, {overhead:.2f}x flat)")
+            print(f"csv,hierarchy,{e},{period},{best * 1e6:.0f}")
+
+    if args.json:
+        payload = {
+            "bench": "hierarchy",
+            "config": {"clients": n, "rounds": args.rounds,
+                       "local_steps": args.local_steps, "reps": args.reps,
+                       "devices": n_dev},
+            "flat_scan_s": flat_s,
+            "flat_scan_clients_per_second": flat_cps,
+            "cells": rows,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    if args.max_overhead and e1_overhead is not None:
+        if e1_overhead > args.max_overhead:
+            print(f"FAIL: E=1 overhead {e1_overhead:.2f}x exceeds budget "
+                  f"{args.max_overhead:.2f}x")
+            return 1
+        print(f"E=1 overhead {e1_overhead:.2f}x within budget "
+              f"{args.max_overhead:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

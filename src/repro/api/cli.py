@@ -31,6 +31,17 @@ energy_capacity=2.0 --set load_mean=0.3 --set deadline=1.5``):
 
     python -m repro run exp.json --policy energy --set harvest_scale=0.8
     python -m repro sweep exp.json --grid policy=precompiled,energy,adaptive
+
+Two-tier topologies: ``--topology {contiguous,striped}``, ``--edges E``
+and ``--edge-period P`` (shorthands for the spec fields ``topology`` /
+``n_edges`` / ``edge_period``) run the hierarchical client→edge→server
+executor — pair them with ``--set executor=hierarchical``; per-edge
+heterogeneity rides ``--set edge_speed=[1.0,0.5]``:
+
+    python -m repro run exp.json --set executor=hierarchical \
+        --topology contiguous --edges 4 --edge-period 5
+    python -m repro sweep exp.json --set executor=hierarchical \
+        --topology contiguous --edges 4 --grid edge_period=1,5,10
 """
 from __future__ import annotations
 
@@ -74,13 +85,22 @@ def _parse_grids(pairs: list[str]) -> dict:
 
 def _load_spec(path: str, sets: list[str],
                policy: str | None = None,
-               device_profile: str | None = None) -> ExperimentSpec:
+               device_profile: str | None = None,
+               topology: str | None = None,
+               edges: int | None = None,
+               edge_period: int | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
     if policy:
         overrides["policy"] = policy
     if device_profile:
         overrides["device_profile"] = device_profile
+    if topology:
+        overrides["topology"] = topology
+    if edges is not None:
+        overrides["n_edges"] = edges
+    if edge_period is not None:
+        overrides["edge_period"] = edge_period
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -103,7 +123,9 @@ def cmd_init(args) -> int:
 
 def cmd_run(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
-                      device_profile=args.device_profile)
+                      device_profile=args.device_profile,
+                      topology=args.topology, edges=args.edges,
+                      edge_period=args.edge_period)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -139,7 +161,9 @@ def cmd_resume(args) -> int:
 
 def cmd_sweep(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
-                      device_profile=args.device_profile)
+                      device_profile=args.device_profile,
+                      topology=args.topology, edges=args.edges,
+                      edge_period=args.edge_period)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
@@ -149,12 +173,23 @@ def cmd_sweep(args) -> int:
 
 def _add_policy_flags(p: argparse.ArgumentParser) -> None:
     from repro.core.budget import POLICY_KINDS
+    from repro.core.hierarchy import TOPOLOGY_KINDS
     p.add_argument("--policy", default=None, choices=POLICY_KINDS,
                    help="budget policy (shorthand for --set policy=...)")
     p.add_argument("--device-profile", default=None,
                    choices=("budget", "uniform"),
                    help="device runtime (shorthand for --set "
                         "device_profile=...)")
+    p.add_argument("--topology", default=None, choices=TOPOLOGY_KINDS,
+                   help="two-tier client→edge assignment (shorthand for "
+                        "--set topology=...; needs "
+                        "--set executor=hierarchical)")
+    p.add_argument("--edges", type=int, default=None,
+                   help="edge aggregator count (shorthand for "
+                        "--set n_edges=...)")
+    p.add_argument("--edge-period", type=int, default=None,
+                   help="intra-edge rounds per server sync (shorthand "
+                        "for --set edge_period=...)")
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -37,6 +37,7 @@ from repro.checkpoint.store import CheckpointManager
 from repro.core.budget import PrecompiledPolicy
 from repro.core.evaluation import evaluate
 from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_hierarchical_span_runner,
                                make_policy_round_fn,
                                make_policy_span_runner,
                                make_sharded_span_runner, span_boundaries)
@@ -68,12 +69,17 @@ class Session:
                  use_fused: bool = False,
                  callbacks: Iterable[Callback] = (),
                  ckpt_dir: str | None = None, keep: int = 3,
-                 spec=None, policy=None, profile=None):
-        if executor not in ("scan", "python", "sharded"):
+                 spec=None, policy=None, profile=None, topology=None):
+        if executor not in ("scan", "python", "sharded", "hierarchical"):
             raise ValueError(f"unknown executor {executor!r}")
-        if executor == "sharded" and use_fused:
-            raise ValueError("use_fused is not supported by the sharded "
-                             "executor; pick one fast path")
+        if executor in ("sharded", "hierarchical") and use_fused:
+            raise ValueError(f"use_fused is not supported by the "
+                             f"{executor} executor; pick one fast path")
+        if (executor == "hierarchical") != (topology is not None):
+            raise ValueError(
+                "the hierarchical executor needs an EdgeTopology (pass "
+                "topology=...), and a topology needs "
+                "executor='hierarchical'")
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
         if (policy is None) != (profile is None):
@@ -91,6 +97,7 @@ class Session:
         self.plan = plan
         self.policy = policy
         self.profile = profile
+        self.topology = topology
         self.x_test = x_test
         self.y_test = y_test
         self.eval_every = eval_every
@@ -102,7 +109,8 @@ class Session:
         self.k_active = plan_k_active(data, fed, plan)
         self.state: PyTree = init_fed_state(jax.random.PRNGKey(fed.seed),
                                             model, data.n_clients,
-                                            policy=policy, profile=profile)
+                                            policy=policy, profile=profile,
+                                            topology=topology)
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
         self._cohort = None
@@ -131,7 +139,8 @@ class Session:
                    y_test=b.y_test, eval_every=spec.eval_every,
                    executor=spec.executor, use_fused=spec.use_fused,
                    callbacks=callbacks, ckpt_dir=ckpt_dir, keep=keep,
-                   spec=spec, policy=b.policy, profile=b.profile)
+                   spec=spec, policy=b.policy, profile=b.profile,
+                   topology=b.topology)
 
     @classmethod
     def restore_from(cls, ckpt_dir: str, *, step: int | None = None,
@@ -177,6 +186,10 @@ class Session:
                 self._span_runner = make_sharded_span_runner(
                     self.model, self.data, self.fed, policy=self.policy,
                     profile=self.profile)
+            elif self.executor == "hierarchical":
+                self._span_runner = make_hierarchical_span_runner(
+                    self.model, self.data, self.fed, self.topology,
+                    policy=self.policy, profile=self.profile)
             else:
                 self._span_runner = make_policy_span_runner(
                     self.model, self.data, self.fed, self.policy,
@@ -198,16 +211,16 @@ class Session:
         self._t = stop
 
     def step(self) -> PyTree:
-        """Advance exactly one round (per-round executor; the sharded
-        executor runs a one-round span so cohort sampling still applies)
-        and fire ``on_round_end``. Evaluation stays on the absolute cadence
-        and is driven by :meth:`run`; a bare ``step()`` never records
-        metrics."""
+        """Advance exactly one round (per-round executor; the sharded and
+        hierarchical executors run a one-round span so cohort sampling /
+        edge-tier state still apply) and fire ``on_round_end``. Evaluation
+        stays on the absolute cadence and is driven by :meth:`run`; a bare
+        ``step()`` never records metrics."""
         t = self._t
         if t >= self.plan.rounds:
             raise RuntimeError(
                 f"plan exhausted: {t}/{self.plan.rounds} rounds done")
-        if self.executor == "sharded":
+        if self.executor in ("sharded", "hierarchical"):
             self._advance_span(t + 1)
         else:
             self.state = self._get_round_fn()(
@@ -238,10 +251,12 @@ class Session:
         if target <= self._t:               # nothing to do; never re-fires
             return self                     # hooks or re-records an eval
         per_round_cbs = any(cb.needs_python_loop for cb in self.callbacks)
-        # the sharded executor has no python-loop fallback (it would drop
-        # cohort sampling); per-round callbacks split its spans instead
+        # the sharded/hierarchical executors have no python-loop fallback
+        # (it would drop cohort sampling / the edge tier); per-round
+        # callbacks split their spans instead
         needs_python = (self.executor == "python"
-                        or (per_round_cbs and self.executor != "sharded"))
+                        or (per_round_cbs and self.executor
+                            not in ("sharded", "hierarchical")))
         if needs_python:
             while self._t < target:
                 self.step()
@@ -300,7 +315,8 @@ class Session:
         mgr = self._require_mgr(ckpt_dir)
         like = init_fed_state(jax.random.PRNGKey(self.fed.seed),
                               self.model, self.data.n_clients,
-                              policy=self.policy, profile=self.profile)
+                              policy=self.policy, profile=self.profile,
+                              topology=self.topology)
         state, extra = mgr.restore(like, step=step)
         self.state = state
         self._t = int(extra.get("round", extra.get("step", 0)))
@@ -328,16 +344,33 @@ class Session:
         the train/estimate decisions the policy actually made, not the
         static plan's table (for ``PrecompiledPolicy`` over a fully-run
         plan the two coincide; for runtime policies only the ledger is
-        truthful)."""
+        truthful).
+
+        Every report carries the int8-quantized upload figure
+        (:mod:`repro.core.compress`); two-tier sessions additionally break
+        uploads down per hop under ``"tiers"`` — client→edge bytes every
+        decided round vs edge→server bytes only on the
+        ``edge_period``-boundary syncs."""
+        from repro.core.compress import (BYTES_PER_PARAM_F32,
+                                         tier_upload_report)
         from repro.core.engine import cost_report_from_counts
         led = self.ledger()
         decided = led["train_rounds"] + led["est_rounds"]
         per_client = led["train_rounds"] / np.maximum(1, decided)
-        return cost_report_from_counts(
+        model_bytes = tree_bytes(self.state["params"])
+        rep = cost_report_from_counts(
             int(led["train_rounds"].sum()), int(led["est_rounds"].sum()),
-            self.data.n_clients, tree_bytes(self.state["params"]),
+            self.data.n_clients, model_bytes,
             variant=variant or self.fed.variant,
             mixed_client_frac=mixed_client_frac, per_client=per_client)
+        rep["upload_bytes_int8"] = (rep["upload_bytes"]
+                                    // BYTES_PER_PARAM_F32)
+        if self.topology is not None:
+            rep["tiers"] = tier_upload_report(
+                client_upload_bytes=rep["upload_bytes"],
+                n_syncs=self.topology.sync_count(self._t),
+                n_edges=self.topology.n_edges, model_bytes=model_bytes)
+        return rep
 
     def ledger(self) -> dict:
         """Per-client energy/cost books accumulated in the round carry:

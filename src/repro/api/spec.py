@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.budget import POLICY_KINDS, BudgetPolicy, make_policy
+from repro.core.hierarchy import TOPOLOGY_KINDS, EdgeTopology
 from repro.core.rounds import FedConfig
 from repro.core.schedules import Plan, make_plan
 from repro.data.federated import FederatedData, build_federated
@@ -30,19 +31,22 @@ from repro.data.partition import (budget_law, partition_classes,
                                   partition_gamma, two_group_budget)
 from repro.data.synthetic import make_dataset, train_test_split
 from repro.models.simple import Classifier, make_classifier
-from repro.system.devices import DeviceProfile, make_profile
+from repro.system.devices import (DeviceProfile, edge_scaled_profile,
+                                  make_profile)
 
 #: schema version embedded in serialized specs; bump on breaking changes
-#: (v2: runtime budget policies + device-profile fields)
-SPEC_VERSION = 2
+#: (v2: runtime budget policies + device-profile fields; v3: two-tier
+#: edge topologies — topology/n_edges/edge_period/edge_speed/edge_harvest)
+SPEC_VERSION = 3
 
 _DATASETS = ("gaussian", "teacher", "image")
 _PARTITIONS = ("gamma", "classes")
 _BUDGETS = ("power", "two_group", "uniform", "explicit")
 _MODELS = ("mlp", "cnn", "resnet18")
 _SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
-_EXECUTORS = ("scan", "python", "sharded")
+_EXECUTORS = ("scan", "python", "sharded", "hierarchical")
 _DEVICE_PROFILES = ("budget", "uniform")
+_TOPOLOGIES = ("flat",) + TOPOLOGY_KINDS
 
 
 @dataclass(frozen=True)
@@ -57,6 +61,7 @@ class Bundle:
     p: np.ndarray
     policy: BudgetPolicy
     profile: DeviceProfile
+    topology: EdgeTopology | None = None
 
 
 @dataclass(frozen=True)
@@ -117,9 +122,20 @@ class ExperimentSpec:
     deadline: float = 2.0            # DeadlineAware: × nominal round time
     adapt_eta: float = 0.5           # AdaptiveProbability feedback gain
 
+    # ---- two-tier topology (executor="hierarchical") --------------------
+    #: client→edge assignment scheme: "flat" (no edge tier) or an
+    #: EdgeTopology kind ("contiguous" | "striped", core/hierarchy.py)
+    topology: str = "flat"
+    n_edges: int = 1               # E edge aggregators
+    edge_period: int = 1           # intra-edge rounds per server sync
+    #: optional per-edge device heterogeneity (length-E multipliers on the
+    #: member clients' flops_rate / harvest rows — heterogeneous gateways)
+    edge_speed: tuple[float, ...] | None = None
+    edge_harvest: tuple[float, ...] | None = None
+
     # ---- execution ------------------------------------------------------
     eval_every: int = 20
-    executor: str = "scan"         # scan | python | sharded
+    executor: str = "scan"         # scan | python | sharded | hierarchical
     use_fused: bool = False
     cohort_size: int | None = None  # sharded executor: participants/round
     seed: int = 0
@@ -165,6 +181,45 @@ class ExperimentSpec:
         if self.executor == "sharded" and self.use_fused:
             raise ValueError("use_fused is not supported by the sharded "
                              "executor; pick one fast path")
+        _check("topology", self.topology, _TOPOLOGIES)
+        if (self.executor == "hierarchical") != (self.topology != "flat"):
+            raise ValueError(
+                "two-tier runs need BOTH executor='hierarchical' AND a "
+                f"non-flat topology (got executor={self.executor!r}, "
+                f"topology={self.topology!r})")
+        if self.topology == "flat":
+            if self.n_edges != 1 or self.edge_period != 1:
+                raise ValueError(
+                    "n_edges/edge_period require a non-flat topology "
+                    f"(got n_edges={self.n_edges}, "
+                    f"edge_period={self.edge_period})")
+            if self.edge_speed is not None or self.edge_harvest is not None:
+                raise ValueError("edge_speed/edge_harvest require a "
+                                 "non-flat topology")
+        else:
+            if self.executor == "hierarchical" and self.use_fused:
+                raise ValueError("use_fused is not supported by the "
+                                 "hierarchical executor; pick one fast "
+                                 "path")
+            if not 1 <= self.n_edges <= self.n_clients:
+                raise ValueError(
+                    f"n_edges must be in [1, {self.n_clients}], got "
+                    f"{self.n_edges}")
+            if self.edge_period < 1:
+                raise ValueError(f"edge_period must be >= 1, got "
+                                 f"{self.edge_period}")
+            for name in ("edge_speed", "edge_harvest"):
+                v = getattr(self, name)
+                if v is None:
+                    continue
+                if len(v) != self.n_edges:
+                    raise ValueError(
+                        f"{name} needs one entry per edge: len={len(v)} "
+                        f"vs n_edges={self.n_edges}")
+                if not all(s > 0 for s in v):
+                    raise ValueError(f"{name} factors must be > 0")
+                object.__setattr__(self, name,
+                                   tuple(float(s) for s in v))
         self.fed_config()               # validates strategy name eagerly
 
     # ---- serialization --------------------------------------------------
@@ -172,8 +227,9 @@ class ExperimentSpec:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["spec_version"] = SPEC_VERSION
-        if d["p"] is not None:
-            d["p"] = list(d["p"])
+        for key in ("p", "edge_speed", "edge_harvest"):
+            if d[key] is not None:
+                d[key] = list(d[key])
         return d
 
     @classmethod
@@ -187,8 +243,9 @@ class ExperimentSpec:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown spec fields: {sorted(unknown)}")
-        if d.get("p") is not None:
-            d["p"] = tuple(d["p"])
+        for key in ("p", "edge_speed", "edge_harvest"):
+            if d.get(key) is not None:
+                d[key] = tuple(d[key])
         return cls(**d)
 
     def to_json(self, indent: int = 2) -> str:
@@ -260,12 +317,26 @@ class ExperimentSpec:
             init_energy=self.energy_init, harvest_scale=self.harvest_scale,
             load_mean=self.load_mean, load_rho=self.load_rho,
             load_jitter=self.load_jitter, seed=self.seed)
+        topology = self.edge_topology()
+        if topology is not None:
+            profile = edge_scaled_profile(
+                profile, topology.assignment, flops_scale=self.edge_speed,
+                harvest_scale=self.edge_harvest)
         policy = make_policy(self.policy, plan=plan, deadline=self.deadline,
                              eta=self.adapt_eta)
         return Bundle(model=model, data=data, fed=self.fed_config(),
                       plan=plan, x_test=jnp.asarray(test.x),
                       y_test=jnp.asarray(test.y), p=p, policy=policy,
-                      profile=profile)
+                      profile=profile, topology=topology)
+
+    def edge_topology(self) -> EdgeTopology | None:
+        """The spec's two-tier topology (deterministic in its fields, so a
+        resumed session rebuilds the identical assignment); None for flat
+        runs."""
+        if self.topology == "flat":
+            return None
+        return EdgeTopology.make(self.topology, self.n_clients,
+                                 self.n_edges, self.edge_period)
 
 
 def _check(name: str, value: str, allowed: Sequence[str]) -> None:

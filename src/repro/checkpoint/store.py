@@ -34,6 +34,13 @@ FED_STATE_KEYS = ("params", "deltas", "prev_local", "trained_ever",
 #: as required once any of them appears in the state.
 POLICY_STATE_KEYS = ("policy", "device", "ledger")
 
+#: two-tier carry keys (the (E,)-stacked edge-aggregator models of
+#: ``repro.core.hierarchy``). Saved whenever present so a mid-edge-period
+#: resume continues bit-identically: the edge displacements accumulated
+#: since the last server sync live ONLY here — restarting them from the
+#: global params would silently rewind the current period.
+HIER_STATE_KEYS = ("edge_params",)
+
 
 def _is_typed_key(leaf) -> bool:
     try:

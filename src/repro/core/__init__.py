@@ -10,6 +10,10 @@
   train/estimate decisions over simulated device state
   (:mod:`repro.system.devices`); legacy plans replay bit-for-bit through
   ``PrecompiledPolicy``.
+* :mod:`repro.core.hierarchy`  — two-tier client→edge→server topologies
+  (``EdgeTopology``): edges aggregate their members for ``edge_period``
+  rounds before the server averages the edge models; collapses to flat
+  FedAvg bit-for-bit with one edge or ``edge_period=1``.
 * :mod:`repro.core.schedules`  — round-robin / ad-hoc / sync / dropout
   plans (now policy *inputs*, no longer engine inputs).
 * :mod:`repro.core.podlevel`   — pods-as-clients CC-FedAvg for LLM-scale
@@ -34,7 +38,14 @@ from repro.core.budget import (  # noqa: F401
     available_policies,
     make_policy,
 )
+from repro.core.hierarchy import (  # noqa: F401
+    EdgeTopology,
+    edge_mass,
+    edge_masked_means,
+    edge_weighted_mean,
+)
 from repro.core.rounds import (  # noqa: F401
+    make_hierarchical_span_runner,
     make_policy_round_fn,
     make_policy_span_runner,
     make_round_body,

@@ -56,6 +56,10 @@ class BudgetCtx:
     profile: dict           # DeviceProfile.rows() (gathered)
     awake: jax.Array        # (M,) bool — duty-cycle mask for round t
     seed: int               # static stream id for stateless randomness
+    #: (M,) int32 edge-aggregator id per client under a two-tier topology
+    #: (:mod:`repro.core.hierarchy`); None in flat runs. Lets a policy
+    #: condition on which gateway a client hangs off (heterogeneous edges).
+    edge_id: jax.Array | None = None
 
 
 @dataclass(frozen=True)
@@ -214,8 +218,10 @@ def make_policy(kind: str, *, plan=None, deadline: float = 2.0,
 
 
 def budget_ctx(rows_profile: dict, dev: dict, rnd, client_ids: jax.Array,
-               sel_mask: jax.Array, seed: int) -> BudgetCtx:
+               sel_mask: jax.Array, seed: int,
+               edge_ids: jax.Array | None = None) -> BudgetCtx:
     """Assemble the per-round decision context (shared by all executors)."""
     return BudgetCtx(round=rnd, client_ids=client_ids, sel_mask=sel_mask,
                      device=dev, profile=rows_profile,
-                     awake=device_awake(rows_profile, rnd), seed=seed)
+                     awake=device_awake(rows_profile, rnd), seed=seed,
+                     edge_id=edge_ids)

@@ -27,6 +27,10 @@ from repro.core.schedules import Plan
 PyTree = Any
 _QMAX = 127.0
 
+#: uncompressed bytes per parameter (f32) — the int8 compression ratio
+#: every report in this module and ``Session.cost_report`` derives from
+BYTES_PER_PARAM_F32 = 4
+
 
 class QuantizedTree(NamedTuple):
     payload: PyTree     # int8 leaves
@@ -65,7 +69,8 @@ def quantization_error(tree: PyTree) -> float:
 
 def compressed_report(plan: Plan, model_bytes: int, *,
                       variant: str = "client",
-                      bytes_per_param_before: int = 4) -> dict:
+                      bytes_per_param_before: int = BYTES_PER_PARAM_F32
+                      ) -> dict:
     """Appendix-A upload accounting with int8 Δ compression.
 
     int8 payload + one f32 scale per leaf ≈ model_bytes/4; the 'skip'
@@ -77,3 +82,31 @@ def compressed_report(plan: Plan, model_bytes: int, *,
     out["upload_bytes_compressed"] = int(base["upload_bytes"] * ratio)
     out["compression_ratio"] = bytes_per_param_before
     return out
+
+
+def tier_upload_report(*, client_upload_bytes: int, n_syncs: int,
+                       n_edges: int, model_bytes: int,
+                       bytes_per_param_before: int = BYTES_PER_PARAM_F32
+                       ) -> dict:
+    """Per-tier upload accounting for a two-tier client→edge→server run
+    (:mod:`repro.core.hierarchy`), with and without int8 Δ compression.
+
+    The client tier uploads to its edge gateway every decided round (the
+    variant-dependent Appendix-A bytes, computed by the caller from the
+    realized ledger); the edge tier uploads one edge model per aggregator
+    per sync — ``n_syncs`` period boundaries crossed so far, E models
+    each. Quantization compresses BOTH hops by ``bytes_per_param_before``×
+    (the per-leaf f32 scales are negligible against the payload).
+    """
+    if n_syncs < 0 or n_edges < 1:
+        raise ValueError(f"need n_syncs >= 0 and n_edges >= 1, got "
+                         f"n_syncs={n_syncs}, n_edges={n_edges}")
+    ratio = 1.0 / bytes_per_param_before
+    edge_up = n_syncs * n_edges * model_bytes
+    return {
+        "client_to_edge_bytes": int(client_upload_bytes),
+        "client_to_edge_bytes_int8": int(client_upload_bytes * ratio),
+        "edge_to_server_bytes": int(edge_up),
+        "edge_to_server_bytes_int8": int(edge_up * ratio),
+        "compression_ratio": bytes_per_param_before,
+    }

@@ -1,0 +1,196 @@
+"""Two-tier client → edge → server federation topology.
+
+CC-FedAvg targets IoT fleets whose devices hang off edge gateways rather
+than a flat star: the edge-FL surveys (Khan et al., "Federated Learning
+for Edge Networks"; Imteaj et al. on resource-constrained IoT) identify
+client→edge→cloud aggregation as the shape that scales FL to millions of
+devices. An :class:`EdgeTopology` pins that shape down as data:
+
+* a static **assignment** of the N clients to E edge aggregators (every
+  client belongs to exactly one edge — validated eagerly);
+* an **edge period** P: each edge runs P rounds of masked intra-edge
+  aggregation on its own members before the server averages the edge
+  models, weighted by how many clients each edge aggregated.
+
+The round semantics live in
+:func:`repro.core.rounds.make_hierarchical_span_runner`; this module owns
+the topology itself plus the small algebra the hierarchy is built on —
+per-edge masked means and their mass-weighted combination. The governing
+identity (property-tested in ``tests/test_hierarchy.py``) is
+
+    edge_weighted_mean(edge_masked_means(x, m), edge_mass(m)) ==
+        tree_masked_mean(x, m)            for ANY mask m,
+
+i.e. weighting each edge by its aggregation mass makes the nested
+edge-then-server mean equal the flat global masked mean — which is why a
+two-tier run with ``edge_period=1`` (or a single edge) collapses to flat
+FedAvg, turning the whole flat executor matrix into the hierarchy's
+differential oracle.
+
+Topologies are deterministic functions of their spec fields (kind,
+n_clients, n_edges), so a resumed session rebuilds the identical
+assignment — the same contract the plan masks and cohort sampler follow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import PyTree, tree_masked_mean
+
+#: assignment schemes ``EdgeTopology.make`` understands
+TOPOLOGY_KINDS = ("contiguous", "striped")
+
+
+@dataclass(frozen=True, eq=False)
+class EdgeTopology:
+    """Static client→edge assignment plus the intra-edge round period."""
+
+    assignment: np.ndarray   # (N,) int32 — edge id of every client
+    n_edges: int
+    edge_period: int = 1
+
+    def __post_init__(self):
+        a = np.asarray(self.assignment, np.int32)
+        object.__setattr__(self, "assignment", a)
+        if a.ndim != 1 or a.size == 0:
+            raise ValueError(f"assignment must be a non-empty 1-D vector, "
+                             f"got shape {a.shape}")
+        if self.n_edges < 1:
+            raise ValueError(f"n_edges must be >= 1, got {self.n_edges}")
+        if self.edge_period < 1:
+            raise ValueError(
+                f"edge_period must be >= 1, got {self.edge_period}")
+        if ((a < 0) | (a >= self.n_edges)).any():
+            raise ValueError(
+                f"assignment ids must lie in [0, {self.n_edges}); got "
+                f"range [{a.min()}, {a.max()}]")
+        sizes = np.bincount(a, minlength=self.n_edges)
+        if (sizes == 0).any():
+            empty = np.flatnonzero(sizes == 0).tolist()
+            raise ValueError(f"every edge needs at least one client; "
+                             f"edges {empty} are empty")
+
+    # ---- constructors ---------------------------------------------------
+
+    @classmethod
+    def make(cls, kind: str, n_clients: int, n_edges: int,
+             edge_period: int = 1) -> "EdgeTopology":
+        """Build a named assignment scheme (the spec-driven entry point)."""
+        if kind == "contiguous":
+            return cls.contiguous(n_clients, n_edges, edge_period)
+        if kind == "striped":
+            return cls.striped(n_clients, n_edges, edge_period)
+        raise ValueError(f"unknown topology kind {kind!r}; available: "
+                         f"{', '.join(TOPOLOGY_KINDS)}")
+
+    @classmethod
+    def contiguous(cls, n_clients: int, n_edges: int,
+                   edge_period: int = 1) -> "EdgeTopology":
+        """Consecutive near-equal blocks: client i → edge ``i // ceil(N/E)``
+        style split (block sizes differ by at most one). When ``N % E == 0``
+        the blocks are exactly equal, which is what lets the hierarchical
+        executor shard whole edges over devices."""
+        if not 1 <= n_edges <= n_clients:
+            raise ValueError(f"n_edges must be in [1, {n_clients}], "
+                             f"got {n_edges}")
+        # np.array_split's near-equal contiguous blocks, as an id vector
+        sizes = np.full(n_edges, n_clients // n_edges, np.int64)
+        sizes[: n_clients % n_edges] += 1
+        return cls(np.repeat(np.arange(n_edges), sizes), n_edges,
+                   edge_period)
+
+    @classmethod
+    def striped(cls, n_clients: int, n_edges: int,
+                edge_period: int = 1) -> "EdgeTopology":
+        """Round-robin striping: client i → edge ``i % E`` (an irregular
+        layout for the 1-shard executor path; it cannot shard whole edges
+        over devices)."""
+        if not 1 <= n_edges <= n_clients:
+            raise ValueError(f"n_edges must be in [1, {n_clients}], "
+                             f"got {n_edges}")
+        return cls(np.arange(n_clients) % n_edges, n_edges, edge_period)
+
+    # ---- views ----------------------------------------------------------
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.assignment.shape[0])
+
+    @property
+    def edge_sizes(self) -> np.ndarray:
+        """(E,) client counts per edge (all >= 1 by construction)."""
+        return np.bincount(self.assignment, minlength=self.n_edges)
+
+    @property
+    def is_contiguous_uniform(self) -> bool:
+        """True when edges are equal-size consecutive blocks — the layout
+        the sharded executor requires so whole edges land on one device."""
+        n, e = self.n_clients, self.n_edges
+        if n % e:
+            return False
+        return bool((self.assignment == np.arange(n) // (n // e)).all())
+
+    def member_mask(self, edge: int) -> np.ndarray:
+        """(N,) bool — membership mask of one edge."""
+        if not 0 <= edge < self.n_edges:
+            raise ValueError(f"edge must be in [0, {self.n_edges}), "
+                             f"got {edge}")
+        return self.assignment == edge
+
+    def client_edges(self) -> jax.Array:
+        """(N,) int32 edge ids as a device array (the ``edge_id`` rows the
+        round/budget contexts carry)."""
+        return jnp.asarray(self.assignment, jnp.int32)
+
+    def sync_count(self, rounds_done: int) -> int:
+        """How many edge→server syncs a run of ``rounds_done`` rounds has
+        performed (a sync closes every ``edge_period``-th round)."""
+        if rounds_done < 0:
+            raise ValueError(f"rounds_done must be >= 0, got {rounds_done}")
+        return rounds_done // self.edge_period
+
+
+# ---------------------------------------------------------------------------
+# the hierarchy's aggregation algebra
+# ---------------------------------------------------------------------------
+
+
+def edge_mass(mask: jax.Array, assignment, n_edges: int) -> jax.Array:
+    """(E,) per-edge mask mass: how many of each edge's clients carry
+    weight in an aggregation round. These are the server-tier weights that
+    make the nested mean exact (see module docstring)."""
+    a = jnp.asarray(assignment)
+    onehot = (a[None, :] == jnp.arange(n_edges)[:, None])
+    return onehot.astype(jnp.float32) @ jnp.asarray(mask, jnp.float32)
+
+
+def edge_masked_means(tree: PyTree, mask: jax.Array, assignment,
+                      n_edges: int) -> PyTree:
+    """Per-edge masked means of a client-stacked tree: an E-stacked tree
+    whose slice e is ``tree_masked_mean`` restricted to edge e's members
+    (an edge with zero mass contributes exact zeros, like the flat empty
+    mask)."""
+    a = jnp.asarray(assignment)
+    maskf = jnp.asarray(mask, jnp.float32)
+    means = [tree_masked_mean(tree, maskf * (a == e).astype(jnp.float32))
+             for e in range(n_edges)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *means)
+
+
+def edge_weighted_mean(edge_tree: PyTree, weights: jax.Array,
+                       eps: float = 1e-12) -> PyTree:
+    """Weighted mean over the leading (edge) axis — the server tier's
+    average of edge models. With ``weights = edge_mass(mask)`` this equals
+    the flat global masked mean for any mask."""
+    w = jnp.asarray(weights, jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), eps)
+
+    def _mean(x):
+        wf = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * wf, axis=0) / denom.astype(x.dtype)
+
+    return jax.tree.map(_mean, edge_tree)

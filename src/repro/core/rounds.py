@@ -1,8 +1,8 @@
 """Round executors for the vectorized-client federation.
 
-Four ways to run the same round semantics, all built from one traceable
-cohort-round core (:func:`_cohort_round`) so they are numerically
-interchangeable:
+Five ways to run the same round semantics, all built from one traceable
+cohort-round core (:func:`_cohort_round` and the shared training/masking
+helpers) so they are numerically interchangeable:
 
 Two decision modes feed every executor:
 
@@ -32,7 +32,16 @@ Two decision modes feed every executor:
   update through the single-HBM-pass Pallas kernel
   (:func:`repro.kernels.ops.cc_delta_update`) on flat (N, P) parameters;
   interpret mode on CPU, Mosaic on TPU. Only strategies whose estimate is
-  a verbatim Δ replay (``fused_capable``) qualify.
+  a verbatim Δ replay (``fused_capable``) qualify;
+* :func:`make_hierarchical_span_runner` — the two-tier client→edge→server
+  executor: clients train against their edge aggregator's model
+  (:class:`repro.core.hierarchy.EdgeTopology`), edges run ``edge_period``
+  rounds of masked intra-edge aggregation, and the server folds the edge
+  models back every period. Edges — and their member clients — shard over
+  the ``("edges",)`` mesh axis (:func:`repro.launch.mesh.make_edge_mesh`):
+  intra-edge rounds are entirely shard-local, only the sync rounds
+  all-gather the uploads. A single edge, or ``edge_period=1``, collapses
+  to flat FedAvg bit-for-bit, so the flat executors are its oracle.
 
 Strategy semantics themselves live in :mod:`repro.core.strategies`; this
 module never branches on a strategy name.
@@ -44,6 +53,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.strategies import (RoundCtx, Strategy, get_strategy,
                                    masked_select)
@@ -53,9 +63,12 @@ from repro.utils.pytree import (
     PyTree,
     tree_add,
     tree_broadcast_clients,
+    tree_index,
     tree_ravel,
     tree_ravel_clients,
+    tree_stack,
     tree_sub,
+    tree_where,
     tree_zeros_like,
 )
 
@@ -63,6 +76,9 @@ _FUSED_PAD = 512               # flat params padded to a tile-friendly multiple
 
 #: mesh axis name the sharded executor splits the client dimension over
 CLIENT_AXIS = "clients"
+
+#: mesh axis name the hierarchical executor splits edge aggregators over
+EDGE_AXIS = "edges"
 
 #: the mask-mode federated state keys (policy mode adds policy/device/ledger)
 _BASE_KEYS = ("params", "deltas", "prev_local", "trained_ever", "round",
@@ -113,10 +129,14 @@ def _local_train(model: Classifier, params, key, cx, cy, size,
 
 
 def init_fed_state(rng, model: Classifier, n_clients: int, *,
-                   policy=None, profile=None) -> PyTree:
+                   policy=None, profile=None, topology=None) -> PyTree:
     """Fresh federated state. With ``policy`` + ``profile`` the carry also
     holds the budget-policy rows, the simulated device state and the
-    energy/cost ledger (policy mode); without, the seed-era 6-key state."""
+    energy/cost ledger (policy mode); without, the seed-era 6-key state.
+    With ``topology`` (an :class:`repro.core.hierarchy.EdgeTopology`) the
+    carry additionally holds the edge tier's models (``edge_params``, an
+    (E,)-stacked params tree initialized to the global model — every edge
+    period starts from an exact sync)."""
     params = model.init(rng)
     zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
     state = {
@@ -135,6 +155,13 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
         state["policy"] = policy.init_rows(n_clients)
         state["device"] = init_device_state(profile)
         state["ledger"] = init_ledger(n_clients)
+    if topology is not None:
+        if topology.n_clients != n_clients:
+            raise ValueError(
+                f"topology covers {topology.n_clients} clients, state has "
+                f"{n_clients}")
+        state["edge_params"] = tree_broadcast_clients(params,
+                                                      topology.n_edges)
     return state
 
 
@@ -151,16 +178,25 @@ def _round_keys(key, n: int):
     return ks[0], ks[1:]
 
 
+def _train_clients(model: Classifier, fed: FedConfig, start, keys,
+                   cx, cy, sizes, k_active):
+    """vmap local training over a client-stacked tree of start params —
+    the per-client broadcast of the flat executors, or each client's edge
+    aggregator model under a two-tier topology."""
+    return jax.vmap(
+        lambda p, k, x, y, sz, ka: _local_train(
+            model, p, k, x, y, sz, fed.local_steps, ka,
+            fed.batch_size, fed.lr)
+    )(start, keys, cx, cy, sizes, k_active)
+
+
 def _train_cohort(model: Classifier, fed: FedConfig, params, keys,
                   cx, cy, sizes, k_active):
     """Broadcast the global model and vmap local training over a cohort
     (full federation or gathered participants)."""
     broadcast = tree_broadcast_clients(params, sizes.shape[0])
-    local = jax.vmap(
-        lambda p, k, x, y, sz, ka: _local_train(
-            model, p, k, x, y, sz, fed.local_steps, ka,
-            fed.batch_size, fed.lr)
-    )(broadcast, keys, cx, cy, sizes, k_active)
+    local = _train_clients(model, fed, broadcast, keys, cx, cy, sizes,
+                           k_active)
     return broadcast, local
 
 
@@ -541,6 +577,332 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
 
         state, _ = jax.lax.scan(step, state, (sel_chunk, cohort_idx))
         return state
+
+    return run_span
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-tier executor: client → edge aggregator → server
+# ---------------------------------------------------------------------------
+
+
+def _tree_rows(tree: PyTree, sl) -> PyTree:
+    """Slice the leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: x[sl], tree)
+
+
+def _slice_ctx(ctx: RoundCtx, sl) -> RoundCtx:
+    """Restrict a round context to one edge's block of client rows."""
+    import dataclasses
+    return dataclasses.replace(
+        ctx, sel_mask=ctx.sel_mask[sl], train_mask=ctx.train_mask[sl],
+        k_active=ctx.k_active[sl],
+        stale_delta=_tree_rows(ctx.stale_delta, sl),
+        trained_delta=_tree_rows(ctx.trained_delta, sl),
+        energy=None if ctx.energy is None else ctx.energy[sl],
+        edge_id=None if ctx.edge_id is None else ctx.edge_id[sl])
+
+
+def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
+                                  fed: FedConfig, topo, *, mesh=None,
+                                  policy=None, profile=None):
+    """Two-tier executor: ``run_span(state, sel_chunk, train_chunk,
+    k_active)`` advances a (C, N) span of plan masks through the
+    client→edge→server topology ``topo``
+    (:class:`repro.core.hierarchy.EdgeTopology`).
+
+    Round semantics (one scan step):
+
+    * every client trains (or estimates) against **its edge aggregator's
+      model** — the carry holds an (E,)-stacked ``edge_params`` tree next
+      to the server's ``params``;
+    * on an intra-edge round (``(t+1) % edge_period != 0``) each edge
+      aggregates ONLY its own members — ``strategy.aggregate`` runs on the
+      edge's block with the edge-restricted aggregation mask, so
+      cc/fednova/s2 estimation semantics hold per edge — and advances its
+      edge model; the server sees nothing;
+    * on a sync round (every ``edge_period``-th) the final intra-edge
+      aggregation is folded into the server merge: client i uploads
+      ``y_i = Δ_i + (x_{e(i)} − G)`` (its fresh delta on top of its edge's
+      period displacement) and the server takes the flat masked mean of
+      the uploads — exactly the aggregation-mass-weighted average of edge
+      models (the nested-mean identity of :mod:`repro.core.hierarchy`),
+      computed with the SAME primitive the flat executors use. All edges
+      then reset to the new global model.
+
+    Collapse guarantees (the oracle for ``tests/test_executor_matrix.py``):
+    with ``edge_period == 1`` the edge displacement is exactly zero, so
+    the sync round IS a flat round bit-for-bit; with a single edge the
+    edge and the server coincide, so every round runs the flat update on
+    the edge model and the sync is an identity (the global model stays
+    fresh every round).
+
+    ``mesh`` is a 1-D ``("edges",)`` mesh
+    (:func:`repro.launch.mesh.make_edge_mesh`; defaults to the largest
+    visible device count that divides E). With more than one shard the
+    topology must be contiguous-uniform so whole edges land on one device:
+    intra-edge rounds then run with ZERO cross-device traffic — each
+    edge's block aggregation reads exactly its own rows, making results
+    bit-identical across shard counts — and sync rounds ``all_gather`` the
+    uploads so every shard computes the identical full-federation merge
+    (the gather IS the edge→server uplink).
+
+    With ``policy`` + ``profile`` (policy mode, the Session default) the
+    signature drops the train chunk — ``run_span(state, sel_chunk,
+    k_active)`` — and the budget policy decides per round from the carried
+    device state, exactly as in the flat policy executors; ``BudgetCtx``
+    and ``RoundCtx`` carry each client's edge id so policies/strategies
+    can condition on the gateway.
+    """
+    import dataclasses
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro.launch.mesh import best_edge_shards, make_edge_mesh
+
+    if (policy is None) != (profile is None):
+        raise ValueError("policy mode needs BOTH policy and profile "
+                         "(got exactly one)")
+    strategy = fed.resolve()
+    n = data.n_clients
+    if topo.n_clients != n:
+        raise ValueError(f"topology covers {topo.n_clients} clients, data "
+                         f"has {n}")
+    n_edges, period = topo.n_edges, topo.edge_period
+    if mesh is None:
+        # irregular layouts cannot place whole edges per device — they run
+        # single-shard; uniform ones spread edges over the visible devices
+        mesh = make_edge_mesh(best_edge_shards(n_edges)
+                              if topo.is_contiguous_uniform else 1)
+    if EDGE_AXIS not in mesh.axis_names:
+        raise ValueError(f"mesh must carry an {EDGE_AXIS!r} axis, got "
+                         f"{mesh.axis_names}")
+    shards = dict(zip(mesh.axis_names, mesh.devices.shape))[EDGE_AXIS]
+    if n_edges % shards:
+        raise ValueError(
+            f"{n_edges} edges must divide evenly over the {shards}-way "
+            f"{EDGE_AXIS!r} mesh axis")
+    uniform = topo.is_contiguous_uniform
+    if shards > 1 and not uniform:
+        raise ValueError(
+            "a multi-shard edge mesh needs a contiguous-uniform topology "
+            "(N % E == 0, consecutive equal blocks) so whole edges land "
+            "on one device; run irregular topologies on a 1-shard mesh")
+    e_local = n_edges // shards
+    n_local = n // shards           # uniform guaranteed when shards > 1
+    block = n // n_edges if uniform else None
+    if uniform:
+        # identical on every shard: local client row r belongs to the
+        # shard's local edge r // block
+        local_assign = jnp.asarray(np.arange(n_local) // block, jnp.int32)
+    else:
+        local_assign = jnp.asarray(topo.assignment, jnp.int32)
+
+    if profile is not None and profile.n_clients != n:
+        raise ValueError(
+            f"device profile covers {profile.n_clients} clients, data has "
+            f"{n}")
+
+    if shards > 1:
+        def local_rows(x):
+            """This shard's client rows of a replicated (N, ...) array."""
+            i = jax.lax.axis_index(EDGE_AXIS)
+            return jax.lax.dynamic_slice_in_dim(x, i * n_local, n_local)
+
+        def gather(x):
+            return jax.lax.all_gather(x, EDGE_AXIS, axis=0, tiled=True)
+
+        def edge_ids_of():
+            return (local_assign
+                    + jax.lax.axis_index(EDGE_AXIS) * e_local)
+    else:
+        def local_rows(x):
+            return x
+
+        def gather(x):
+            return x
+
+        def edge_ids_of():
+            return jnp.asarray(topo.assignment, jnp.int32)
+
+    hist_keys = ("deltas", "prev_local", "trained_ever")
+
+    def hier_round(G, rnd, edge_params, hist, keys, cx, cy, sizes,
+                   sel, train, k_active, energy=None):
+        """One two-tier round over this shard's clients and edges; returns
+        (new_G replicated, new_edge_params, new_hist)."""
+        edge_ids = edge_ids_of()
+        client_start = jax.tree.map(lambda x: x[local_assign], edge_params)
+        local = _train_clients(model, fed, client_start, keys, cx, cy,
+                               sizes, k_active)
+        trained_delta = tree_sub(local, client_start)
+        stale_delta = tree_sub(hist["prev_local"], client_start)
+        stale_delta = masked_select(hist["trained_ever"], stale_delta,
+                                    tree_zeros_like(stale_delta))
+        ctx = RoundCtx(sel_mask=sel, train_mask=train, k_active=k_active,
+                       round=rnd, tau=fed.tau, stale_delta=stale_delta,
+                       trained_delta=trained_delta, axis_name=None,
+                       energy=energy, edge_id=edge_ids)
+        est = strategy.estimate(hist, ctx)
+        delta_i = masked_select(train, trained_delta, est)
+        aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+
+        # ---- intra-edge tier: each edge aggregates only its members ---
+        # Uniform layouts slice each edge's own block, so total work stays
+        # O(N) and nothing crosses shards; irregular layouts (1-shard
+        # only) pay E full-width masked aggregations — the cost of
+        # arbitrary assignments at small scale.
+        def intra_update(edge_params):
+            parts = []
+            for e in range(e_local):
+                if uniform:
+                    sl = slice(e * block, (e + 1) * block)
+                    d_e = strategy.aggregate(_tree_rows(delta_i, sl),
+                                             aggf[sl], _slice_ctx(ctx, sl))
+                else:
+                    member = (local_assign == e).astype(jnp.float32)
+                    d_e = strategy.aggregate(delta_i, aggf * member, ctx)
+                parts.append(tree_add(tree_index(edge_params, e), d_e))
+            return tree_stack(parts)
+
+        if n_edges == 1:
+            # the edge IS the server: the sync is an identity, performed
+            # every round so the global model never goes stale — this is
+            # exactly the flat executor's update, bit-for-bit
+            ep_intra = intra_update(edge_params)
+            return tree_index(ep_intra, 0), ep_intra, _roll_hist(
+                hist, ctx, trained_delta, local, est, sel, train)
+
+        # ---- sync tier: fold the last edge aggregation into the merge -
+        def sync_update(edge_params):
+            if period == 1:
+                y = delta_i    # edge displacement is exactly zero
+            else:
+                y = tree_add(delta_i,
+                             tree_sub(client_start,
+                                      tree_broadcast_clients(G, n_local)))
+            ctx_full = dataclasses.replace(
+                ctx, sel_mask=gather(sel), train_mask=gather(train),
+                k_active=gather(k_active),
+                stale_delta=jax.tree.map(gather, stale_delta),
+                trained_delta=jax.tree.map(gather, trained_delta),
+                energy=None if energy is None else gather(energy),
+                edge_id=gather(edge_ids))
+            d_global = strategy.aggregate(jax.tree.map(gather, y),
+                                          gather(aggf), ctx_full)
+            G_sync = tree_add(G, d_global)
+            return G_sync, tree_broadcast_clients(G_sync, e_local)
+
+        if period == 1:
+            new_G, new_ep = sync_update(edge_params)
+        else:
+            # lax.cond, NOT a where-select: the all_gather + full merge of
+            # the sync branch must only execute on period boundaries —
+            # intra-edge rounds stay collective-free (the predicate is
+            # replicated, so no shard can diverge)
+            is_sync = ((rnd + 1) % period) == 0
+            new_G, new_ep = jax.lax.cond(
+                is_sync, sync_update,
+                lambda ep: (G, intra_update(ep)), edge_params)
+        return new_G, new_ep, _roll_hist(hist, ctx, trained_delta, local,
+                                         est, sel, train)
+
+    def _roll_hist(hist, ctx, trained_delta, local, est, sel, train):
+        deltas, prev_local = strategy.update_history(hist, ctx,
+                                                     trained_delta, local,
+                                                     est)
+        return {"deltas": deltas, "prev_local": prev_local,
+                "trained_ever": hist["trained_ever"] | (sel & train)}
+
+    rspec, sspec = PartitionSpec(), PartitionSpec(EDGE_AXIS)
+    state_spec = {"params": rspec, "round": rspec, "key": rspec,
+                  "edge_params": sspec}
+    state_spec.update({k: sspec for k in hist_keys})
+    if policy is not None:
+        state_spec.update(policy=sspec, device=sspec, ledger=sspec)
+    chunk_spec = PartitionSpec(None, EDGE_AXIS)
+    data_args = (data.x, data.y, data.sizes)
+
+    if policy is None:
+        def span_body(state, sel_chunk, train_chunk, k_active, cx, cy,
+                      sizes):
+            def step(st, xs):
+                sel, train = xs
+                key, keys = _round_keys(st["key"], n)
+                new_G, new_ep, new_hist = hier_round(
+                    st["params"], st["round"], st["edge_params"],
+                    {k: st[k] for k in hist_keys}, local_rows(keys),
+                    cx, cy, sizes, sel, train, k_active)
+                return {"params": new_G, "edge_params": new_ep,
+                        **new_hist, "round": st["round"] + 1,
+                        "key": key}, None
+
+            state, _ = jax.lax.scan(step, state, (sel_chunk, train_chunk))
+            return state
+
+        if shards > 1:
+            # check_rep=False: the replication checker cannot see through
+            # the scan carry that params/round/key stay replicated — they
+            # are by construction (the merge runs on all_gather'ed values
+            # identically on every shard)
+            span_body = shard_map(
+                span_body, mesh=mesh,
+                in_specs=(state_spec, chunk_spec, chunk_spec, sspec,
+                          sspec, sspec, sspec),
+                out_specs=state_spec, check_rep=False)
+
+        @jax.jit
+        def run_span(state, sel_chunk, train_chunk, k_active):
+            return span_body(state, sel_chunk, train_chunk, k_active,
+                             *data_args)
+
+        return run_span
+
+    # ---- policy mode: in-loop decisions over per-edge device state ----
+    from repro.core.budget import budget_ctx
+    from repro.system.devices import advance_devices, update_ledger
+
+    prof_rows = profile.rows()
+    all_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def span_body(state, sel_chunk, k_active, cx, cy, sizes):
+        prof_l = jax.tree.map(local_rows, prof_rows)
+        ids_l = local_rows(all_ids)
+
+        def step(st, sel):
+            key, keys = _round_keys(st["key"], n)
+            dev = st["device"]
+            bctx = budget_ctx(prof_l, dev, st["round"], ids_l, sel,
+                              profile.seed, edge_ids=edge_ids_of())
+            train, new_pol = policy.decide(st["policy"], bctx)
+            train = train & sel
+            new_G, new_ep, new_hist = hier_round(
+                st["params"], st["round"], st["edge_params"],
+                {k: st[k] for k in hist_keys}, local_rows(keys),
+                cx, cy, sizes, sel, train, k_active,
+                energy=dev["energy"])
+            spent = sel & train
+            return {"params": new_G, "edge_params": new_ep, **new_hist,
+                    "policy": new_pol,
+                    "device": advance_devices(prof_l, dev, spent,
+                                              st["round"], ids_l,
+                                              profile.seed),
+                    "ledger": update_ledger(st["ledger"], prof_l, sel,
+                                            train),
+                    "round": st["round"] + 1, "key": key}, None
+
+        state, _ = jax.lax.scan(step, state, sel_chunk)
+        return state
+
+    if shards > 1:
+        span_body = shard_map(
+            span_body, mesh=mesh,
+            in_specs=(state_spec, chunk_spec, sspec, sspec, sspec, sspec),
+            out_specs=state_spec, check_rep=False)
+
+    @jax.jit
+    def run_span(state, sel_chunk, k_active):
+        return span_body(state, sel_chunk, k_active, *data_args)
 
     return run_span
 

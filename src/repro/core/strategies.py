@@ -70,6 +70,10 @@ class RoundCtx:
     #: None when the round runs from precomputed masks without a device
     #: simulator. Strategies may condition estimation/weighting on it.
     energy: jax.Array | None = None
+    #: per-client edge-aggregator ids under a two-tier topology
+    #: (:mod:`repro.core.hierarchy`); None in flat runs. A strategy may
+    #: condition estimation/weighting on which gateway a client hangs off.
+    edge_id: jax.Array | None = None
 
 
 @dataclass(frozen=True)

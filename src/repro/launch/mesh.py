@@ -52,3 +52,27 @@ def best_client_shards(cohort_size: int, max_shards: int | None = None) -> int:
     on a 4-device host uses 3 shards rather than failing."""
     limit = min(cohort_size, max_shards or len(jax.devices()))
     return max(d for d in range(1, limit + 1) if cohort_size % d == 0)
+
+
+def make_edge_mesh(n_shards: int | None = None):
+    """1-D ``("edges",)`` mesh for the hierarchical two-tier executor.
+
+    Edge aggregators — and with them their member clients — are split over
+    this axis (:func:`repro.core.rounds.make_hierarchical_span_runner`):
+    intra-edge rounds run entirely shard-local, and only the edge→server
+    sync rounds communicate across it. Defaults to all visible devices;
+    pass ``n_shards`` to use a prefix of them.
+    """
+    n = len(jax.devices()) if n_shards is None else n_shards
+    if n < 1 or n > len(jax.devices()):
+        raise ValueError(f"n_shards must be in [1, {len(jax.devices())}], "
+                         f"got {n}")
+    return jax.make_mesh((n,), ("edges",))
+
+
+def best_edge_shards(n_edges: int, max_shards: int | None = None) -> int:
+    """Largest device count ≤ ``max_shards`` that divides the edge count —
+    whole edges must land on one device so intra-edge aggregation never
+    crosses shards."""
+    limit = min(n_edges, max_shards or len(jax.devices()))
+    return max(d for d in range(1, limit + 1) if n_edges % d == 0)

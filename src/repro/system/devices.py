@@ -136,6 +136,44 @@ def make_profile(kind: str, p, *, capacity: float = 4.0,
         seed=seed)
 
 
+def edge_scaled_profile(profile: DeviceProfile, assignment, *,
+                        flops_scale=None,
+                        harvest_scale=None) -> DeviceProfile:
+    """Modulate a profile per edge aggregator — heterogeneous gateways.
+
+    Under a two-tier topology (:mod:`repro.core.hierarchy`) the devices
+    behind one gateway often share its character: a solar-powered rural
+    edge harvests less, an industrial edge hosts faster hardware.
+    ``flops_scale`` / ``harvest_scale`` are (E,) per-edge multipliers
+    applied to every member client's ``flops_rate`` / ``harvest`` rows;
+    ``None`` leaves a row family untouched.
+    """
+    import dataclasses
+
+    a = np.asarray(assignment, np.int64)
+    if a.shape != (profile.n_clients,):
+        raise ValueError(
+            f"assignment covers {a.shape} clients, profile has "
+            f"{profile.n_clients}")
+    updates: dict = {}
+    for name, scale in (("flops_rate", flops_scale),
+                        ("harvest", harvest_scale)):
+        if scale is None:
+            continue
+        s = np.asarray(scale, np.float32)
+        # exact length: every edge is nonempty (EdgeTopology invariant),
+        # so the edge count is a.max()+1 — a per-CLIENT-length vector here
+        # is a caller confusion that must not silently truncate
+        if s.ndim != 1 or len(s) != int(a.max()) + 1:
+            raise ValueError(
+                f"{name} scale needs one entry per edge "
+                f"({int(a.max()) + 1}), got shape {s.shape}")
+        if not (s > 0).all():
+            raise ValueError(f"{name} scale factors must be > 0")
+        updates[name] = getattr(profile, name) * jnp.asarray(s[a])
+    return dataclasses.replace(profile, **updates) if updates else profile
+
+
 # ---------------------------------------------------------------------------
 # traced state transitions
 # ---------------------------------------------------------------------------

@@ -1,22 +1,31 @@
 """Cross-executor differential matrix.
 
-Four numerically-interchangeable executors now run the same round
-semantics — {python, scan, fused, sharded} — so equivalence is pinned
-systematically: every executor × every registered strategy × every
-algorithm variant must reproduce the python-loop oracle's final params and
-metric stream to ≤1e-5. The oracle runs once per strategy and is shared
-across cells (the variant axis provably never enters round numerics — it
-drives the Appendix-A cost accounting, which every cell smoke-checks
-instead).
+Six numerically-interchangeable executor cells now run the same round
+semantics — {python, scan, fused, sharded} plus the two collapse
+configurations of the hierarchical two-tier executor (single edge /
+per-round sync) — so equivalence is pinned systematically: every executor
+× every registered strategy × every algorithm variant must reproduce the
+python-loop oracle's final params and metric stream to ≤1e-5. The oracle
+runs once per strategy and is shared across cells (the variant axis
+provably never enters round numerics — it drives the Appendix-A cost
+accounting, which every cell smoke-checks instead).
 
 The sharded executor is additionally pinned on its own semantics: a
 sampled cohort round equals a full round whose masks are zeroed outside
 the cohort (clients keep their global training keys), and cohort/mesh
 validation errors fire eagerly.
 
+The hierarchical executor carries two pins of its own: its collapse
+configurations (one edge, or ``edge_period=1``) reproduce the flat scan
+executor BIT-FOR-BIT (``assert_array_equal``, not allclose) for
+cc/fedavg/fednova, and a multi-edge multi-period run is bit-identical on
+a 1-shard and a multi-shard edge mesh — intra-edge aggregation reads each
+edge's own block only, and sync rounds all-gather before reducing.
+
 This file must pass both on the default 1-device CPU and under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
-executor-matrix job), where ``shard_map`` really splits the client axis.
+executor-matrix and hierarchy-matrix jobs), where ``shard_map`` really
+splits the client/edge axes.
 """
 import jax
 import jax.numpy as jnp
@@ -25,7 +34,9 @@ import pytest
 
 from repro.api import ExperimentSpec, Session
 from repro.core.budget import EnergyAware, PrecompiledPolicy
+from repro.core.hierarchy import EdgeTopology
 from repro.core.rounds import (FedConfig, init_fed_state,
+                               make_hierarchical_span_runner,
                                make_policy_round_fn,
                                make_policy_span_runner, make_round_fn,
                                make_sharded_span_runner, make_span_runner)
@@ -35,23 +46,35 @@ from repro.core.strategies import available_strategies, get_strategy
 from repro.data.federated import CohortSampler, build_federated
 from repro.data.partition import budget_law, partition_gamma
 from repro.data.synthetic import make_dataset, train_test_split
-from repro.launch.mesh import best_client_shards, make_client_mesh
+from repro.launch.mesh import (best_client_shards, best_edge_shards,
+                               make_client_mesh, make_edge_mesh)
 from repro.models.simple import make_classifier
 
 N = 4
-EXECUTORS = ("python", "scan", "fused", "sharded")
+EXECUTORS = ("python", "scan", "fused", "sharded", "hier_single_edge",
+             "hier_sync_every_round")
 VARIANTS = ("client", "server", "mixed")
 ATOL = 1e-5
+
+#: the hierarchical collapse configurations: a single edge running 3-round
+#: periods, and N single-client edges syncing every round
+HIER_CELLS = {"hier_single_edge": dict(n_edges=1, edge_period=3),
+              "hier_sync_every_round": dict(n_edges=N, edge_period=1)}
 
 
 def _spec(strategy: str, executor: str) -> ExperimentSpec:
     use_fused = executor == "fused"
+    extra = {}
+    if executor in HIER_CELLS:
+        extra = dict(topology="contiguous", **HIER_CELLS[executor])
+        executor = "hierarchical"
     return ExperimentSpec(
         dataset="gaussian", n_samples=256, dim=8, n_classes=4,
         n_clients=N, budget="power", beta=2, model="mlp", width=4,
         strategy=strategy, local_steps=2, batch_size=16, lr=0.1,
         schedule="adhoc", rounds=6, eval_every=2, seed=0,
-        executor="scan" if use_fused else executor, use_fused=use_fused)
+        executor="scan" if use_fused else executor, use_fused=use_fused,
+        **extra)
 
 
 _RUNS: dict = {}
@@ -147,6 +170,15 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
         s_pol = make_policy_span_runner(model, fd, fed, policy, profile,
                                         fused=fused)(
             fresh(policy=policy, profile=profile), sel, k)
+    elif executor in HIER_CELLS:
+        cell = HIER_CELLS[executor]
+        topo = EdgeTopology.contiguous(N, cell["n_edges"],
+                                       cell["edge_period"])
+        s_mask = make_hierarchical_span_runner(model, fd, fed, topo)(
+            fresh(topology=topo), sel, train, k)
+        s_pol = make_hierarchical_span_runner(
+            model, fd, fed, topo, policy=policy, profile=profile)(
+            fresh(policy=policy, profile=profile, topology=topo), sel, k)
     else:                                        # sharded
         idx = jnp.asarray(CohortSampler(N, 2, seed=3).indices(rounds))
         s_mask = make_sharded_span_runner(model, fd, fed, cohort_size=2)(
@@ -309,3 +341,131 @@ def test_sharded_session_rejects_fused(setup):
         Session(model, fd, FedConfig(strategy="cc"),
                 make_plan("full", np.ones(N), 2), executor="sharded",
                 use_fused=True)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-tier executor: flat collapse + shard-count invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("collapse", sorted(HIER_CELLS))
+@pytest.mark.parametrize("strategy", ["cc", "fedavg", "fednova"])
+def test_hierarchy_collapse_is_bit_for_bit_flat(strategy, collapse):
+    """The acceptance pin of the two-tier executor: a single-edge topology
+    (the edge IS the server) and an ``edge_period=1`` topology (every
+    round syncs, edge displacement exactly zero) reproduce the flat scan
+    executor EXACTLY — params, full history and metric stream — on any
+    device count."""
+    flat_params, flat_accs, flat_sess = _run(strategy, "scan")
+    hier_params, hier_accs, hier_sess = _run(strategy, collapse)
+    assert hier_accs == flat_accs
+    for a, b in zip(jax.tree.leaves(hier_params),
+                    jax.tree.leaves(flat_params)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"{collapse}/{strategy}")
+    for key in ("deltas", "prev_local", "trained_ever"):
+        for a, b in zip(jax.tree.leaves(hier_sess.state[key]),
+                        jax.tree.leaves(flat_sess.state[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{collapse}/{key}")
+
+
+@pytest.mark.parametrize("strategy", ["cc", "s2", "fednova"])
+def test_hierarchy_bit_identical_across_shard_counts(setup, strategy):
+    """E=4 edges, multi-round periods: the span must be bit-identical on a
+    1-shard and a multi-shard ``("edges",)`` mesh — intra-edge aggregation
+    reads exactly its own edge's block, and sync rounds all-gather the
+    uploads so every shard computes the identical merge. On a 1-device
+    host both meshes degenerate to one shard and the test is a tautology;
+    the CI hierarchy-matrix job runs it under 4 virtual devices."""
+    model, _ = setup
+    n = 8                      # 4 edges × 2 clients, shardable 1/2/4 ways
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, n, gamma=0.5, seed=0))
+    fed = FedConfig(strategy=strategy, local_steps=2, batch_size=16,
+                    lr=0.1)
+    plan = make_plan("adhoc", budget_law(n, beta=2), 6, seed=1)
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    sel, train = jnp.asarray(plan.selection), jnp.asarray(plan.training)
+    topo = EdgeTopology.contiguous(n, 4, edge_period=3)
+
+    states = []
+    for shards in (1, best_edge_shards(topo.n_edges)):
+        run = make_hierarchical_span_runner(model, fd, fed, topo,
+                                            mesh=make_edge_mesh(shards))
+        states.append(run(init_fed_state(jax.random.PRNGKey(0), model, n,
+                                         topology=topo), sel, train, k))
+    a_state, b_state = states
+    for key in ("params", "edge_params", "deltas", "prev_local",
+                "trained_ever"):
+        for a, b in zip(jax.tree.leaves(a_state[key]),
+                        jax.tree.leaves(b_state[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+
+def test_hierarchy_policy_mode_equals_mask_mode_multi_period(setup):
+    """Beyond the matrix's collapse cells: a PrecompiledPolicy hierarchical
+    run over a multi-edge multi-period topology must equal the mask-mode
+    hierarchical run bit-for-bit (same pin the flat executors carry)."""
+    model, fd = setup
+    fed = FedConfig(strategy="cc", local_steps=2, batch_size=16, lr=0.1)
+    p = budget_law(N, beta=2)
+    plan = make_plan("adhoc", p, 6, seed=2)
+    topo = EdgeTopology.contiguous(N, 2, edge_period=3)
+    k = jnp.full((N,), fed.local_steps, jnp.int32)
+    sel, train = jnp.asarray(plan.selection), jnp.asarray(plan.training)
+    policy = PrecompiledPolicy.from_plan(plan)
+    profile = make_profile("budget", p, seed=0)
+
+    s_mask = make_hierarchical_span_runner(model, fd, fed, topo)(
+        init_fed_state(jax.random.PRNGKey(0), model, N, topology=topo),
+        sel, train, k)
+    s_pol = make_hierarchical_span_runner(
+        model, fd, fed, topo, policy=policy, profile=profile)(
+        init_fed_state(jax.random.PRNGKey(0), model, N, policy=policy,
+                       profile=profile, topology=topo), sel, k)
+    for key in ("params", "edge_params", "deltas", "prev_local",
+                "trained_ever"):
+        for a, b in zip(jax.tree.leaves(s_mask[key]),
+                        jax.tree.leaves(s_pol[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+
+def test_hierarchical_rejects_bad_meshes(setup):
+    model, fd = setup
+    fed = FedConfig(strategy="cc", local_steps=2)
+    topo = EdgeTopology.contiguous(N, 2, edge_period=2)
+    with pytest.raises(ValueError, match="edges"):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        make_hierarchical_span_runner(model, fd, fed, topo, mesh=mesh)
+    with pytest.raises(ValueError, match="policy"):
+        make_hierarchical_span_runner(model, fd, fed, topo,
+                                      policy=EnergyAware())
+    if len(jax.devices()) >= 3:
+        with pytest.raises(ValueError, match="divide"):
+            make_hierarchical_span_runner(model, fd, fed, topo,
+                                          mesh=make_edge_mesh(3))
+    if len(jax.devices()) >= 2:
+        striped = EdgeTopology.striped(N, 2, edge_period=2)
+        with pytest.raises(ValueError, match="contiguous-uniform"):
+            make_hierarchical_span_runner(model, fd, fed, striped,
+                                          mesh=make_edge_mesh(2))
+
+
+def test_best_edge_shards_divides():
+    n_dev = len(jax.devices())
+    for e in (1, 2, 3, 4, 6, 8):
+        d = best_edge_shards(e)
+        assert e % d == 0 and 1 <= d <= n_dev
+    assert best_edge_shards(6, max_shards=4) == 3
+
+
+def test_edge_mesh_axis():
+    mesh = make_edge_mesh()
+    assert mesh.axis_names == ("edges",)
+    assert mesh.devices.size == len(jax.devices())
+    with pytest.raises(ValueError):
+        make_edge_mesh(len(jax.devices()) + 1)

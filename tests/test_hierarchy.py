@@ -1,0 +1,366 @@
+"""Two-tier topology layer: invariants, resume, and per-tier accounting.
+
+Property-based pins (through the hypothesis shim when the real package is
+absent):
+
+* every client lands in exactly one edge and no edge is empty, for every
+  assignment scheme and any (N, E);
+* the nested-mean identity that justifies the sync-round design: the
+  edge-mass-weighted mean of per-edge masked means equals the flat global
+  masked mean for ANY mask;
+* assignments are pure functions of their spec fields, so a resumed
+  session rebuilds the identical topology.
+
+Plus the PR-4-style stateful-policy pin for the hierarchical executor —
+a mid-edge-period save/restore with EnergyAware continues bit-identically
+including the edge-tier carry and the ledger — and the quantized-upload
+wiring of ``core/compress.py`` into ``Session.cost_report``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import ExperimentSpec, Session
+from repro.checkpoint.store import (FED_STATE_KEYS, HIER_STATE_KEYS,
+                                    POLICY_STATE_KEYS)
+from repro.core.compress import (dequantize_tree, quantize_tree,
+                                 quantization_error, tier_upload_report)
+from repro.core.hierarchy import (TOPOLOGY_KINDS, EdgeTopology, edge_mass,
+                                  edge_masked_means, edge_weighted_mean)
+from repro.system.devices import edge_scaled_profile, make_profile
+from repro.utils.pytree import tree_masked_mean
+
+
+def hier_spec(**kw) -> ExperimentSpec:
+    base = dict(dataset="gaussian", n_samples=256, dim=8, n_classes=4,
+                n_clients=8, partition="gamma", gamma=0.5, budget="power",
+                beta=2, model="mlp", width=4, strategy="cc", local_steps=2,
+                batch_size=16, lr=0.1, schedule="adhoc", rounds=8,
+                eval_every=4, seed=0, executor="hierarchical",
+                topology="contiguous", n_edges=4, edge_period=2)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# topology invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=24, deadline=None)
+@given(n_clients=st.integers(1, 40), n_edges=st.integers(1, 40),
+       kind=st.sampled_from(TOPOLOGY_KINDS))
+def test_every_client_in_exactly_one_edge(n_clients, n_edges, kind):
+    if n_edges > n_clients:
+        n_edges = n_clients
+    topo = EdgeTopology.make(kind, n_clients, n_edges, edge_period=1)
+    a = topo.assignment
+    assert a.shape == (n_clients,)
+    assert ((0 <= a) & (a < n_edges)).all()        # one edge id per client
+    sizes = topo.edge_sizes
+    assert sizes.sum() == n_clients                # ... and only one
+    assert (sizes >= 1).all()                      # no empty edges
+    # member masks partition the federation
+    total = np.zeros(n_clients, int)
+    for e in range(n_edges):
+        total += topo.member_mask(e).astype(int)
+    assert (total == 1).all()
+
+
+@settings(max_examples=16, deadline=None)
+@given(n_clients=st.integers(2, 24), n_edges=st.integers(1, 6),
+       mask_seed=st.integers(0, 10_000), assign_seed=st.integers(0, 10_000))
+def test_edge_weighted_mean_of_edge_means_is_global_masked_mean(
+        n_clients, n_edges, mask_seed, assign_seed):
+    """The identity the sync round is built on: weighting each edge by its
+    aggregation mass makes the nested client→edge→server mean equal the
+    flat masked mean — for any mask, including masks that silence whole
+    edges."""
+    if n_edges > n_clients:
+        n_edges = n_clients
+    rng = np.random.default_rng(assign_seed)
+    # arbitrary total assignment (every edge nonempty via seeding a perm)
+    a = np.concatenate([np.arange(n_edges),
+                        rng.integers(0, n_edges, n_clients - n_edges)])
+    rng.shuffle(a)
+    mask = np.random.default_rng(mask_seed).random(n_clients) < 0.6
+    tree = {"w": jnp.asarray(
+        np.random.default_rng(mask_seed + 1).normal(
+            size=(n_clients, 3, 2)), jnp.float32)}
+    nested = edge_weighted_mean(
+        edge_masked_means(tree, jnp.asarray(mask), a, n_edges),
+        edge_mass(jnp.asarray(mask), a, n_edges))
+    flat = tree_masked_mean(tree, jnp.asarray(mask, jnp.float32))
+    np.testing.assert_allclose(np.asarray(nested["w"]),
+                               np.asarray(flat["w"]), atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_edges=st.integers(1, 8), edge_period=st.integers(1, 5),
+       kind=st.sampled_from(TOPOLOGY_KINDS))
+def test_assignment_stable_under_rebuild(n_edges, edge_period, kind):
+    """Topologies are pure functions of their spec fields — the property a
+    resumed session relies on to rebuild the identical client→edge map."""
+    a = EdgeTopology.make(kind, 16, n_edges, edge_period)
+    b = EdgeTopology.make(kind, 16, n_edges, edge_period)
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert a.n_edges == b.n_edges and a.edge_period == b.edge_period
+
+
+def test_topology_validation_errors():
+    with pytest.raises(ValueError, match="unknown topology"):
+        EdgeTopology.make("ring", 8, 2)
+    with pytest.raises(ValueError, match="n_edges"):
+        EdgeTopology.contiguous(4, 5)
+    with pytest.raises(ValueError, match="edge_period"):
+        EdgeTopology.contiguous(4, 2, edge_period=0)
+    with pytest.raises(ValueError, match="empty"):
+        EdgeTopology(np.zeros(4, np.int32), n_edges=2)
+    with pytest.raises(ValueError, match="ids must lie"):
+        EdgeTopology(np.array([0, 1, 2, 3]), n_edges=2)
+    with pytest.raises(ValueError, match="edge must be"):
+        EdgeTopology.contiguous(4, 2).member_mask(2)
+
+
+def test_contiguous_uniform_detection():
+    assert EdgeTopology.contiguous(8, 4).is_contiguous_uniform
+    assert EdgeTopology.contiguous(8, 1).is_contiguous_uniform
+    assert not EdgeTopology.contiguous(7, 2).is_contiguous_uniform  # 4+3
+    assert not EdgeTopology.striped(8, 4).is_contiguous_uniform
+    assert EdgeTopology.striped(8, 1).is_contiguous_uniform  # E=1 is both
+
+
+def test_sync_count():
+    topo = EdgeTopology.contiguous(8, 2, edge_period=3)
+    assert [topo.sync_count(t) for t in range(8)] == [0, 0, 0, 1, 1, 1, 2, 2]
+    with pytest.raises(ValueError, match="rounds_done"):
+        topo.sync_count(-1)
+
+
+# ---------------------------------------------------------------------------
+# spec v3: topology fields round-trip + validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_topology_round_trip(tmp_path):
+    spec = hier_spec(edge_speed=(1.0, 0.5, 2.0, 1.0),
+                     edge_harvest=(1.0, 1.0, 0.25, 1.0))
+    back = ExperimentSpec.from_dict(spec.to_dict())
+    assert back == spec
+    path = spec.save(str(tmp_path / "spec.json"))
+    assert ExperimentSpec.load(path) == spec
+    topo = spec.edge_topology()
+    assert topo.n_edges == 4 and topo.edge_period == 2
+    np.testing.assert_array_equal(topo.assignment,
+                                  spec.edge_topology().assignment)
+
+
+def test_spec_v2_json_still_loads():
+    """Pre-topology specs (no v3 fields) load with flat defaults."""
+    d = hier_spec().to_dict()
+    for f in ("topology", "n_edges", "edge_period", "edge_speed",
+              "edge_harvest"):
+        d.pop(f)
+    d.update(spec_version=2, executor="scan")
+    spec = ExperimentSpec.from_dict(d)
+    assert spec.topology == "flat" and spec.edge_topology() is None
+
+
+def test_spec_topology_validation():
+    with pytest.raises(ValueError, match="topology"):
+        hier_spec(topology="ring")
+    with pytest.raises(ValueError, match="hierarchical"):
+        hier_spec(executor="scan")                 # topology w/o executor
+    with pytest.raises(ValueError, match="hierarchical"):
+        hier_spec(topology="flat", n_edges=1, edge_period=1)
+    with pytest.raises(ValueError, match="n_edges"):
+        hier_spec(n_edges=9)
+    with pytest.raises(ValueError, match="edge_period"):
+        hier_spec(edge_period=0)
+    with pytest.raises(ValueError, match="non-flat"):
+        ExperimentSpec(n_edges=2)
+    with pytest.raises(ValueError, match="edge_speed"):
+        hier_spec(edge_speed=(1.0, 2.0))           # wrong length
+    with pytest.raises(ValueError, match="edge_harvest"):
+        hier_spec(edge_harvest=(1.0, 0.0, 1.0, 1.0))
+    with pytest.raises(ValueError, match="use_fused"):
+        hier_spec(use_fused=True)
+
+
+def test_session_rejects_topology_mismatch():
+    spec = hier_spec()
+    b = spec.build()
+    with pytest.raises(ValueError, match="EdgeTopology"):
+        Session(b.model, b.data, b.fed, b.plan, executor="hierarchical")
+    with pytest.raises(ValueError, match="hierarchical"):
+        Session(b.model, b.data, b.fed, b.plan, topology=b.topology)
+
+
+def test_edge_scaled_profile():
+    p = np.full(6, 0.5)
+    base = make_profile("budget", p, seed=0)
+    topo = EdgeTopology.contiguous(6, 3)
+    prof = edge_scaled_profile(base, topo.assignment,
+                               flops_scale=(1.0, 2.0, 0.5),
+                               harvest_scale=(1.0, 1.0, 0.25))
+    np.testing.assert_allclose(np.asarray(prof.flops_rate),
+                               np.repeat([0.5, 1.0, 0.25], 2))
+    np.testing.assert_allclose(np.asarray(prof.harvest),
+                               np.repeat([0.5, 0.5, 0.125], 2))
+    # untouched families stay identical
+    np.testing.assert_array_equal(np.asarray(prof.train_cost),
+                                  np.asarray(base.train_cost))
+    with pytest.raises(ValueError, match="one entry per edge"):
+        edge_scaled_profile(base, topo.assignment, flops_scale=(1.0,))
+    with pytest.raises(ValueError, match="> 0"):
+        edge_scaled_profile(base, topo.assignment,
+                            harvest_scale=(1.0, -1.0, 1.0))
+
+
+def test_session_builds_edge_scaled_profile():
+    spec = hier_spec(n_edges=2, edge_speed=(1.0, 0.5))
+    sess = Session.from_spec(spec)
+    rate = np.asarray(sess.profile.flops_rate)
+    base = np.asarray(make_profile("budget", spec.budgets(),
+                                   seed=spec.seed).flops_rate)
+    np.testing.assert_allclose(rate[:4], base[:4])
+    np.testing.assert_allclose(rate[4:], 0.5 * base[4:])
+
+
+# ---------------------------------------------------------------------------
+# mid-edge-period resume with a stateful policy (the PR-4 pin, two-tier)
+# ---------------------------------------------------------------------------
+
+
+def test_hier_resume_stateful_policy_matches_uninterrupted(tmp_path):
+    """Kill-and-restore in the MIDDLE of an edge period with EnergyAware:
+    the edge-tier carry (accumulated edge displacements), the policy's
+    device state and the energy ledger must all continue bit-identically —
+    a resume that restarted ``edge_params`` from the global model would
+    silently rewind the current period."""
+    spec = hier_spec(n_edges=2, edge_period=3, policy="energy", rounds=10,
+                     eval_every=3, load_mean=0.3, load_jitter=0.2,
+                     energy_init=1.0)
+    full = Session.from_spec(spec).run()
+
+    part = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    part.run(4)                  # 4 % 3 != 0 → mid-period interrupt
+    part.save()
+    del part
+
+    resumed = Session.restore_from(str(tmp_path))
+    assert resumed.t == 4
+    # the checkpoint carried live edge displacement (mid-period ≠ global)
+    mid_edge = jax.tree.leaves(resumed.state["edge_params"])[0]
+    assert not np.array_equal(
+        np.asarray(mid_edge)[0],
+        np.asarray(jax.tree.leaves(resumed.state["params"])[0]))
+    resumed.run()
+    assert resumed.metrics.history == full.metrics.history
+    keys = FED_STATE_KEYS + POLICY_STATE_KEYS + HIER_STATE_KEYS
+    for key in keys:
+        for a, b in zip(jax.tree.leaves(resumed.state[key]),
+                        jax.tree.leaves(full.state[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+
+def test_hier_checkpoint_carries_edge_tier(tmp_path):
+    spec = hier_spec(rounds=4, eval_every=4)
+    sess = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    sess.run(3)                  # mid-period (edge_period=2)
+    path = sess.save()
+    with np.load(path) as z:
+        keys = set(z.files)
+    assert any(k.startswith("edge_params/") for k in keys)
+    # restore_from rebuilds the identical topology purely from the spec
+    resumed = Session.restore_from(str(tmp_path))
+    np.testing.assert_array_equal(resumed.topology.assignment,
+                                  sess.topology.assignment)
+    for a, b in zip(jax.tree.leaves(resumed.state["edge_params"]),
+                    jax.tree.leaves(sess.state["edge_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# quantized uploads: round-trip + per-tier cost accounting
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_on_live_session_deltas():
+    """The in-loop wiring regression for ``core/compress.py``: quantizing
+    the Δ history a real session produced round-trips with small relative
+    error, preserves structure/shape/dtype, and keeps exact zeros exact."""
+    sess = Session.from_spec(hier_spec(rounds=4, eval_every=4)).run()
+    deltas = sess.state["deltas"]
+    q = quantize_tree(deltas)
+    back = dequantize_tree(q)
+    assert jax.tree.structure(back) == jax.tree.structure(deltas)
+    for orig, rec, pay in zip(jax.tree.leaves(deltas),
+                              jax.tree.leaves(back),
+                              jax.tree.leaves(q.payload)):
+        assert pay.dtype == jnp.int8
+        assert rec.shape == orig.shape and rec.dtype == orig.dtype
+        scale = np.abs(np.asarray(orig)).max() / 127.0
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(orig),
+                                   atol=scale * 0.51)
+        # untrained clients' rows are exact zeros and stay exact
+        zeros = np.asarray(orig) == 0.0
+        assert (np.asarray(rec)[zeros] == 0.0).all()
+    assert quantization_error(deltas) < 0.02
+
+
+def test_cost_report_tiers():
+    spec = hier_spec(n_edges=4, edge_period=2, rounds=8, eval_every=8,
+                     schedule="full")
+    sess = Session.from_spec(spec).run()
+    rep = sess.cost_report()
+    model_bytes = rep["upload_bytes"] // (8 * 8)   # full: N×T uploads
+    tiers = rep["tiers"]
+    assert tiers["client_to_edge_bytes"] == rep["upload_bytes"]
+    # 8 rounds / period 2 → 4 syncs × 4 edges
+    assert tiers["edge_to_server_bytes"] == 4 * 4 * model_bytes
+    assert tiers["client_to_edge_bytes_int8"] == rep["upload_bytes"] // 4
+    assert tiers["edge_to_server_bytes_int8"] == \
+        tiers["edge_to_server_bytes"] // 4
+    assert rep["upload_bytes_int8"] == rep["upload_bytes"] // 4
+
+
+def test_cost_report_flat_has_no_tiers_but_int8():
+    sess = Session.from_spec(hier_spec(
+        executor="scan", topology="flat", n_edges=1, edge_period=1,
+        rounds=2, eval_every=2)).run()
+    rep = sess.cost_report()
+    assert "tiers" not in rep
+    assert rep["upload_bytes_int8"] == rep["upload_bytes"] // 4
+
+
+def test_tier_upload_report_validation():
+    with pytest.raises(ValueError, match="n_syncs"):
+        tier_upload_report(client_upload_bytes=10, n_syncs=-1, n_edges=2,
+                           model_bytes=4)
+
+
+# ---------------------------------------------------------------------------
+# CLI: topology shorthands
+# ---------------------------------------------------------------------------
+
+
+def test_cli_runs_hierarchical_spec(tmp_path, capsys):
+    import json
+
+    from repro.api.cli import main as cli_main
+    spec_path = str(tmp_path / "spec.json")
+    assert cli_main(["init", spec_path, "--set", "rounds=2",
+                     "--set", "eval_every=2", "--set", "n_samples=256",
+                     "--set", "dim=8", "--set", "n_classes=4",
+                     "--set", "n_clients=4", "--set", "width=4",
+                     "--set", "local_steps=2"]) == 0
+    assert cli_main(["run", spec_path, "--quiet",
+                     "--topology", "contiguous", "--edges", "2",
+                     "--edge-period", "2",
+                     "--set", "executor=hierarchical"]) == 0
+    summary = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert summary["rounds_done"] == 2
