@@ -1,25 +1,231 @@
-"""Microbenchmarks of the Pallas kernels (interpret mode on CPU: these
-numbers measure the reference semantics, not TPU runtime — the TPU story
-is in §Roofline) plus their jnp oracles for relative sanity."""
+"""Microbenchmarks of the Pallas kernels plus the quantized (q8) fused
+round-update sweep.
+
+Two entry points:
+
+* ``run()`` — the compact CSV lines ``benchmarks.run`` prints alongside
+  the paper tables (interpret mode on CPU: these numbers measure the
+  reference semantics, not TPU runtime — the TPU story is in §Roofline);
+* ``main()`` — the N×P sweep behind ``BENCH_kernels.json``: the int8
+  fused round (``ops.cc_delta_update_q8``, which off-TPU dispatches to
+  its vectorized XLA path) against the honest f32 comparator — the FULL
+  tree-ops round a non-compressed run executes, including the O(N·P)
+  ``prev_local`` roll that the int8 replay carry eliminates. Effective
+  GB/s are reported against a measured same-host copy bandwidth (the
+  machine-local roofline), and the per-cohort history-gather bytes give
+  the sharded executor's gather traffic with and without compression.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py \
+        [--sizes 8x65536,16x262144,64x1048576] [--reps 5]
+        [--cohorts 8,16,32,64] [--json BENCH_kernels.json]
+        [--max-overhead 0]
+
+``--max-overhead X`` (X > 0) turns the run into a smoke gate: exit
+nonzero if at any swept size the q8 round takes more than X× the f32
+round — the CI kernel-bench job pins small interpret-mode shapes with it.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line
+from repro.core.compress import quantize_rows
 from repro.kernels import ops, ref
 
 
 def _bench(fn, *args, iters: int = 3) -> float:
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# the two round comparators
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _f32_round(locals_, deltas, prev_local, trained_ever, globals_, train,
+               sel):
+    """One uncompressed round over flat (N, P) state, mirroring what
+    ``rounds._cohort_round`` actually executes every round: the stale
+    delta is computed and masked UNCONDITIONALLY (the generic round body
+    builds the full ``RoundCtx``), the Algorithm-1 select/aggregate runs,
+    and BOTH histories roll — Δ and the O(N·P) ``prev_local`` that the
+    int8 replay carry eliminates."""
+    trained = locals_ - globals_[None]
+    stale = jnp.where(trained_ever[:, None] > 0,
+                      prev_local - globals_[None], 0.0)
+    est = deltas                          # cc replay; stale stays a dead
+    del stale                             # read just like in the real round
+    d = jnp.where(train[:, None] > 0, trained, est)
+    aggw = (sel * train)
+    g = globals_ + ((aggw[:, None] * d).sum(0)
+                    / jnp.maximum(aggw.sum(), 1e-9))
+    new_d = jnp.where(train[:, None] > 0, trained, deltas)
+    new_prev = jnp.where(train[:, None] > 0, locals_, prev_local)
+    return new_d, new_prev, g
+
+
+def _q8_round(locals_, payload, scales, globals_, train, sel):
+    """One int8 round through the public op (jnp path on CPU, Pallas on
+    TPU): dequant→select/aggregate→requant, no ``prev_local`` at all."""
+    n = locals_.shape[0]
+    upd = sel * train
+    ones, zeros = jnp.ones((n,)), jnp.zeros((n,))
+    return ops.cc_delta_update_q8(
+        locals_, payload, scales, globals_, upd, upd, upd, ones, zeros,
+        ones, jnp.maximum(jnp.sum(upd), 1e-9), jnp.float32(1.0))
+
+
+#: bytes touched per round (reads + writes), the effective-bandwidth
+#: numerator. f32: read locals/deltas/prev_local, write deltas/prev_local
+#: → 20·N·P. q8: read locals + payload, write payload → 6·N·P.
+_F32_BYTES_PER_NP = 20
+_Q8_BYTES_PER_NP = 6
+
+
+def _copy_bandwidth_gbs(nbytes: int, reps: int) -> float:
+    """Measured same-host copy bandwidth — the roofline every effective
+    GB/s in the sweep is reported against (2 bytes moved per byte copied)."""
+    x = jnp.zeros((max(nbytes, 1 << 20) // 4,), jnp.float32)
+    t = _bench(jax.jit(lambda a: a + 1.0), x, iters=reps)
+    return 2 * x.size * 4 / t / 1e9
+
+
+def _bench_pair(f1, args1, f2, args2, reps: int) -> tuple[float, float]:
+    """Best-of-``reps`` for two functions with their reps interleaved, so
+    ambient load drift on a shared host biases neither side."""
+    jax.block_until_ready(f1(*args1))
+    jax.block_until_ready(f2(*args2))
+    best1 = best2 = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f1(*args1))
+        best1 = min(best1, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(f2(*args2))
+        best2 = min(best2, time.perf_counter() - t0)
+    return best1, best2
+
+
+def _sweep_point(n: int, p: int, reps: int, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    locals_ = jax.random.normal(k1, (n, p), jnp.float32)
+    deltas = 0.1 * jax.random.normal(k2, (n, p), jnp.float32)
+    prev = jax.random.normal(k3, (n, p), jnp.float32)
+    globals_ = jnp.zeros((p,), jnp.float32)
+    train = (jnp.arange(n) % 2 == 0).astype(jnp.float32)
+    trained_ever = jnp.ones((n,), jnp.float32)
+    sel = jnp.ones((n,), jnp.float32)
+    payload, scales = quantize_rows(deltas)
+
+    t_f32, t_q8 = _bench_pair(
+        _f32_round, (locals_, deltas, prev, trained_ever, globals_, train,
+                     sel),
+        _q8_round, (locals_, payload, scales, globals_, train, sel), reps)
+    return {
+        "n": n, "p": p,
+        "f32_s": t_f32, "q8_s": t_q8,
+        "q8_speedup": t_f32 / t_q8,
+        "f32_gbs": _F32_BYTES_PER_NP * n * p / t_f32 / 1e9,
+        "q8_gbs": _Q8_BYTES_PER_NP * n * p / t_q8 / 1e9,
+    }
+
+
+def _history_gather_bytes(p: int, cohorts: list[int]) -> list[dict]:
+    """Sharded-executor gather traffic for an M-cohort round: the f32
+    carry gathers Δ + prev_local rows (8 bytes/param), the int8 replay
+    carry one payload row + one f32 scale per member."""
+    out = []
+    for m in cohorts:
+        f32 = m * p * 8
+        int8 = m * (p + 4)
+        out.append({"cohort": m, "f32_bytes": f32, "int8_bytes": int8,
+                    "ratio": f32 / int8})
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="8x65536,16x262144,64x1048576",
+                    help="comma-separated NxP sweep points")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--cohorts", default="8,16,32,64")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_kernels.json"),
+        help="write machine-readable results here ('' disables)")
+    ap.add_argument("--max-overhead", type=float, default=0.0,
+                    help="smoke gate: fail if q8_s > X * f32_s anywhere "
+                         "(0 disables)")
+    args = ap.parse_args(argv)
+    sizes = [tuple(int(v) for v in s.split("x"))
+             for s in args.sizes.split(",") if s]
+    cohorts = [int(c) for c in args.cohorts.split(",") if c]
+
+    key = jax.random.PRNGKey(0)
+    copy_gbs = _copy_bandwidth_gbs(
+        max(n * p * 4 for n, p in sizes), args.reps)
+    print(f"backend={jax.default_backend()} devices={len(jax.devices())} "
+          f"copy_bandwidth={copy_gbs:.1f} GB/s (best of {args.reps})")
+
+    rows, violations = [], []
+    for i, (n, p) in enumerate(sizes):
+        row = _sweep_point(n, p, args.reps, jax.random.fold_in(key, i))
+        row["f32_roofline_frac"] = row["f32_gbs"] / copy_gbs
+        row["q8_roofline_frac"] = row["q8_gbs"] / copy_gbs
+        rows.append(row)
+        print(f"N={n:4d} P={p:9d}: f32 {row['f32_s'] * 1e3:8.2f} ms "
+              f"({row['f32_gbs']:6.1f} GB/s) | q8 {row['q8_s'] * 1e3:8.2f} "
+              f"ms ({row['q8_gbs']:6.1f} GB/s) | q8 speedup "
+              f"{row['q8_speedup']:.2f}x")
+        print(f"csv,kernel_q8_round,{n}x{p},{row['q8_s'] * 1e6:.0f}")
+        if args.max_overhead and row["q8_s"] > args.max_overhead * row["f32_s"]:
+            violations.append((n, p, row["q8_s"] / row["f32_s"]))
+
+    gather = _history_gather_bytes(max(p for _, p in sizes), cohorts)
+    for g in gather:
+        print(f"history gather cohort={g['cohort']:4d}: "
+              f"f32 {g['f32_bytes'] / 1e6:9.1f} MB vs int8 "
+              f"{g['int8_bytes'] / 1e6:9.1f} MB ({g['ratio']:.2f}x)")
+
+    if args.json:
+        payload = {
+            "bench": "kernels_q8",
+            "config": {"reps": args.reps, "backend": jax.default_backend(),
+                       "devices": len(jax.devices())},
+            "copy_bandwidth_gbs": copy_gbs,
+            "sweep": rows,
+            "history_gather_bytes": gather,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    if violations:
+        for n, p, ratio in violations:
+            print(f"OVERHEAD VIOLATION N={n} P={p}: q8/f32 = {ratio:.2f} "
+                  f"> {args.max_overhead}")
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# the compact CSV entry points for ``benchmarks.run``
+# ---------------------------------------------------------------------------
 
 
 def run() -> list[str]:
@@ -45,4 +251,13 @@ def run() -> list[str]:
     t_cc_ref = _bench(lambda: ref.cc_delta_update_ref(loc, de, g, tm, tm))
     lines.append(csv_line("kernel_cc_update_pallas_interp", t_cc,
                           f"ref_s={t_cc_ref:.4f}"))
+    # q8 vs the full f32 round at one mid-size point
+    row = _sweep_point(8, 1 << 18, 3, k)
+    lines.append(csv_line("kernel_cc_q8_round", row["q8_s"],
+                          f"f32_s={row['f32_s']:.4f};"
+                          f"speedup={row['q8_speedup']:.2f}"))
     return lines
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,6 +2,10 @@
 emits one CSV line per (arch × shape × mesh) with the three terms, the
 dominant bottleneck, and the useful-FLOPs ratio. Source of EXPERIMENTS.md
 §Roofline.
+
+Also folds in the committed ``BENCH_kernels.json`` (see
+``benchmarks/kernel_bench.py``): one line per q8-vs-f32 sweep point with
+effective GB/s against the measured same-host copy-bandwidth roofline.
 """
 from __future__ import annotations
 
@@ -13,6 +17,29 @@ from benchmarks.common import Timer, csv_line
 
 RESULT_DIRS = ("results/dryrun_1pod_opt", "results/dryrun_2pod_opt",
                "results/dryrun_ccround_opt", "results/perf")
+
+_KERNEL_BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json")
+
+
+def q8_roofline_lines(path: str = _KERNEL_BENCH_JSON) -> list[str]:
+    """Roofline rows for the quantized round-update sweep, from the
+    committed kernel-bench JSON (empty if it has not been generated)."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        bench = json.load(fh)
+    roof = bench.get("copy_bandwidth_gbs", 0.0)
+    lines = []
+    for row in bench.get("sweep", []):
+        lines.append(csv_line(
+            f"roofline_q8_round_{row['n']}x{row['p']}", row["q8_s"],
+            f"q8_gbs={row['q8_gbs']:.2f};f32_gbs={row['f32_gbs']:.2f};"
+            f"copy_gbs={roof:.2f};"
+            f"q8_roofline_frac={row.get('q8_roofline_frac', 0):.3f};"
+            f"q8_speedup={row['q8_speedup']:.2f}"))
+    return lines
 
 
 def load_records() -> list[dict]:
@@ -46,6 +73,7 @@ def run() -> list[str]:
             f"collective_s={rf['collective_s']:.4f};"
             f"bottleneck={rf['bottleneck']};"
             f"useful_flops={r.get('useful_flops_ratio', 0):.3f}"))
+    lines.extend(q8_roofline_lines())
     lines.append(csv_line("roofline_summary", t.seconds,
                           f"records_ok={n_ok}/{len(recs)}"))
     return lines

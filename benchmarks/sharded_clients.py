@@ -45,7 +45,15 @@ def main() -> None:
                     help="comma-separated cohort sizes to sweep")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--width", type=int, default=16,
+                    help="client model width: sized so per-client work "
+                         "(not per-round dispatch) dominates, which is the "
+                         "regime the cohort-scaling comparison is about")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--cooldown", type=float, default=0.0,
+                    help="idle seconds before every timed call, letting a "
+                         "sustained-turbo host recover its clock so each "
+                         "measurement starts from the same DVFS state")
     ap.add_argument("--json", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_sharded_clients.json"),
@@ -58,7 +66,8 @@ def main() -> None:
     tr, _ = train_test_split(ds)
     parts = partition_gamma(tr, n, gamma=0.5, seed=0)
     fd = build_federated(tr, parts)
-    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8,
+                            width=args.width)
     plan = make_plan("adhoc", budget_law(n, beta=4), args.rounds, seed=0)
     fed = FedConfig(strategy="cc", local_steps=args.local_steps,
                     batch_size=32, lr=0.1)
@@ -85,37 +94,59 @@ def main() -> None:
     print(f"scan (full federation): {scan_s * 1e3:8.1f} ms "
           f"({scan_cps:9.1f} client-rounds/s)")
 
-    rows = []
+    # Equal-work sweep: every cohort size runs the SAME total number of
+    # client-rounds per timed call (rounds scale inversely with cohort
+    # size). Equal call durations keep the sustained-AVX downclock state
+    # of a shared single-core host identical across sizes — with a fixed
+    # round count the cohort-64 call runs ~2× longer than cohort-32 and
+    # finishes at a lower clock, which reads as a phantom scaling
+    # regression. Compile + warm every size first, then interleave the
+    # timed reps (ping-pong order) so ambient load drift biases no size.
+    work = n * args.rounds                       # client-rounds per call
+    runners = []
     for m in cohorts:
         if m > n:
             print(f"cohort {m} > clients {n}, skipping")
             continue
-        shards = best_client_shards(m)
+        rounds_m = max(1, work // m)
+        plan_m = make_plan("adhoc", budget_law(n, beta=4), rounds_m, seed=0)
+        xs = (jnp.asarray(plan_m.selection), jnp.asarray(plan_m.training),
+              jnp.asarray(CohortSampler(n, m, seed=0).indices(rounds_m)))
         sharded = make_sharded_span_runner(model, fd, fed, cohort_size=m)
-        idx = jnp.asarray(CohortSampler(n, m, seed=0).indices(args.rounds))
         s0 = init_fed_state(jax.random.PRNGKey(0), model, n)
-        _block(sharded(s0, sel, train, k, idx))
-        times = []
-        for _ in range(args.reps):
+        _block(sharded(s0, xs[0], xs[1], k, xs[2]))
+        runners.append((m, rounds_m, sharded, xs))
+    best = {m: float("inf") for m, _, _, _ in runners}
+    for r in range(args.reps):
+        order = runners if r % 2 == 0 else runners[::-1]
+        for m, rounds_m, sharded, xs in order:
+            if args.cooldown:
+                time.sleep(args.cooldown)
             state = init_fed_state(jax.random.PRNGKey(0), model, n)
             t0 = time.perf_counter()
-            _block(sharded(state, sel, train, k, idx))
-            times.append(time.perf_counter() - t0)
-        best = min(times)
-        cps = m * args.rounds / best
+            _block(sharded(state, xs[0], xs[1], k, xs[2]))
+            best[m] = min(best[m], time.perf_counter() - t0)
+
+    rows = []
+    for m, rounds_m, _, _ in runners:
+        shards = best_client_shards(m)
+        cps = m * rounds_m / best[m]
         rows.append({"cohort_size": m, "shards": shards,
-                     "total_s": best, "ms_per_round": best / args.rounds * 1e3,
+                     "rounds": rounds_m, "total_s": best[m],
+                     "ms_per_round": best[m] / rounds_m * 1e3,
                      "clients_per_second": cps})
-        print(f"sharded cohort={m:5d} ({shards} shard{'s'[:shards > 1]}): "
-              f"{best * 1e3:8.1f} ms ({cps:9.1f} client-rounds/s)")
-        print(f"csv,sharded_clients,{m},{best * 1e6:.0f}")
+        print(f"sharded cohort={m:5d} ({shards} shard{'s'[:shards > 1]}, "
+              f"{rounds_m} rounds): {best[m] * 1e3:8.1f} ms "
+              f"({cps:9.1f} client-rounds/s)")
+        print(f"csv,sharded_clients,{m},{best[m] * 1e6:.0f}")
 
     if args.json:
         payload = {
             "bench": "sharded_clients",
             "config": {"clients": n, "rounds": args.rounds,
-                       "local_steps": args.local_steps, "reps": args.reps,
-                       "devices": n_dev},
+                       "local_steps": args.local_steps,
+                       "width": args.width, "reps": args.reps,
+                       "cooldown_s": args.cooldown, "devices": n_dev},
             "scan_full_s": scan_s,
             "scan_full_clients_per_second": scan_cps,
             "cohorts": rows,

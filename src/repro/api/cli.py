@@ -21,7 +21,9 @@ Examples:
 Executor selection rides the spec fields: ``--set executor=sharded --set
 cohort_size=8`` runs each round's sampled cohort shard_map'ed over the
 client mesh (all visible devices), ``--set use_fused=true`` takes the
-fused Pallas path.
+fused Pallas path. ``--compress int8`` (with ``--set use_fused=true``)
+stores the Δ history as int8 payload + per-client scales and runs the
+quantized fused kernel — ~4× less history memory/wire traffic.
 
 Budget policies: ``--policy {precompiled,energy,deadline,adaptive}`` picks
 the in-loop train/estimate decision maker and ``--device-profile
@@ -88,7 +90,8 @@ def _load_spec(path: str, sets: list[str],
                device_profile: str | None = None,
                topology: str | None = None,
                edges: int | None = None,
-               edge_period: int | None = None) -> ExperimentSpec:
+               edge_period: int | None = None,
+               compress: str | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
     if policy:
@@ -101,6 +104,8 @@ def _load_spec(path: str, sets: list[str],
         overrides["n_edges"] = edges
     if edge_period is not None:
         overrides["edge_period"] = edge_period
+    if compress:
+        overrides["compress"] = compress
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -125,7 +130,7 @@ def cmd_run(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
                       device_profile=args.device_profile,
                       topology=args.topology, edges=args.edges,
-                      edge_period=args.edge_period)
+                      edge_period=args.edge_period, compress=args.compress)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -163,7 +168,7 @@ def cmd_sweep(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
                       device_profile=args.device_profile,
                       topology=args.topology, edges=args.edges,
-                      edge_period=args.edge_period)
+                      edge_period=args.edge_period, compress=args.compress)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
@@ -190,6 +195,10 @@ def _add_policy_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--edge-period", type=int, default=None,
                    help="intra-edge rounds per server sync (shorthand "
                         "for --set edge_period=...)")
+    p.add_argument("--compress", default=None, choices=("none", "int8"),
+                   help="Δ-history wire/memory format (shorthand for "
+                        "--set compress=...; int8 needs "
+                        "--set use_fused=true)")
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -82,6 +82,12 @@ class Session:
                 "executor='hierarchical'")
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+        if fed.compress == "int8" and not use_fused:
+            raise ValueError(
+                "compress='int8' carries the Δ history in the fused "
+                "kernels' flat int8 layout, which only the fused executor "
+                "consumes; pass use_fused=True (executor 'scan' or "
+                "'python'), or compress='none'")
         if (policy is None) != (profile is None):
             raise ValueError("pass policy and profile together (or neither "
                              "for the plan-replaying default)")
@@ -110,7 +116,10 @@ class Session:
         self.state: PyTree = init_fed_state(jax.random.PRNGKey(fed.seed),
                                             model, data.n_clients,
                                             policy=policy, profile=profile,
-                                            topology=topology)
+                                            topology=topology,
+                                            compress=fed.compress,
+                                            needs_stale=fed.resolve()
+                                            .needs_stale)
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
         self._cohort = None
@@ -316,7 +325,9 @@ class Session:
         like = init_fed_state(jax.random.PRNGKey(self.fed.seed),
                               self.model, self.data.n_clients,
                               policy=self.policy, profile=self.profile,
-                              topology=self.topology)
+                              topology=self.topology,
+                              compress=self.fed.compress,
+                              needs_stale=self.fed.resolve().needs_stale)
         state, extra = mgr.restore(like, step=step)
         self.state = state
         self._t = int(extra.get("round", extra.get("step", 0)))
@@ -347,10 +358,14 @@ class Session:
         truthful).
 
         Every report carries the int8-quantized upload figure
-        (:mod:`repro.core.compress`); two-tier sessions additionally break
-        uploads down per hop under ``"tiers"`` — client→edge bytes every
-        decided round vs edge→server bytes only on the
-        ``edge_period``-boundary syncs."""
+        (:mod:`repro.core.compress`). With ``compress="none"`` it is
+        *accounted* (``upload_bytes / 4``, the what-if estimate); with
+        ``compress="int8"`` it is *measured* from the carried wire format —
+        tile-padded int8 payload rows plus one f32 scale per upload —
+        flagged by ``upload_bytes_int8_measured``. Two-tier sessions
+        additionally break uploads down per hop under ``"tiers"`` —
+        client→edge bytes every decided round vs edge→server bytes only on
+        the ``edge_period``-boundary syncs."""
         from repro.core.compress import (BYTES_PER_PARAM_F32,
                                          tier_upload_report)
         from repro.core.engine import cost_report_from_counts
@@ -363,8 +378,17 @@ class Session:
             self.data.n_clients, model_bytes,
             variant=variant or self.fed.variant,
             mixed_client_frac=mixed_client_frac, per_client=per_client)
-        rep["upload_bytes_int8"] = (rep["upload_bytes"]
-                                    // BYTES_PER_PARAM_F32)
+        if self.fed.compress == "int8":
+            q = self.state["deltas"]
+            wire_bytes = (q["payload"].shape[1] * q["payload"].dtype.itemsize
+                          + q["scales"].dtype.itemsize)
+            rep["upload_bytes_int8"] = int(
+                rep["upload_bytes"] / model_bytes * wire_bytes)
+            rep["upload_bytes_int8_measured"] = True
+        else:
+            rep["upload_bytes_int8"] = (rep["upload_bytes"]
+                                        // BYTES_PER_PARAM_F32)
+            rep["upload_bytes_int8_measured"] = False
         if self.topology is not None:
             rep["tiers"] = tier_upload_report(
                 client_upload_bytes=rep["upload_bytes"],

@@ -36,8 +36,11 @@ from repro.system.devices import (DeviceProfile, edge_scaled_profile,
 
 #: schema version embedded in serialized specs; bump on breaking changes
 #: (v2: runtime budget policies + device-profile fields; v3: two-tier
-#: edge topologies — topology/n_edges/edge_period/edge_speed/edge_harvest)
-SPEC_VERSION = 3
+#: edge topologies — topology/n_edges/edge_period/edge_speed/edge_harvest;
+#: v4: int8 Δ-history compression — compress)
+SPEC_VERSION = 4
+
+_COMPRESS = ("none", "int8")
 
 _DATASETS = ("gaussian", "teacher", "image")
 _PARTITIONS = ("gamma", "classes")
@@ -137,6 +140,9 @@ class ExperimentSpec:
     eval_every: int = 20
     executor: str = "scan"         # scan | python | sharded | hierarchical
     use_fused: bool = False
+    #: Δ-history wire/storage format: "none" (f32) | "int8" (quantized
+    #: payload + per-row scales; requires use_fused)
+    compress: str = "none"
     cohort_size: int | None = None  # sharded executor: participants/round
     seed: int = 0
 
@@ -181,6 +187,11 @@ class ExperimentSpec:
         if self.executor == "sharded" and self.use_fused:
             raise ValueError("use_fused is not supported by the sharded "
                              "executor; pick one fast path")
+        _check("compress", self.compress, _COMPRESS)
+        if self.compress == "int8" and not self.use_fused:
+            raise ValueError(
+                "compress='int8' stores the Δ history in the fused "
+                "kernels' int8 layout; it requires use_fused=True")
         _check("topology", self.topology, _TOPOLOGIES)
         if (self.executor == "hierarchical") != (self.topology != "flat"):
             raise ValueError(
@@ -275,7 +286,8 @@ class ExperimentSpec:
                          local_steps=self.local_steps,
                          batch_size=self.batch_size, lr=self.lr,
                          tau=self.tau, seed=self.seed,
-                         cohort_size=self.cohort_size)
+                         cohort_size=self.cohort_size,
+                         compress=self.compress)
 
     def budgets(self) -> np.ndarray:
         if self.budget == "power":

@@ -148,6 +148,21 @@ def load_pytree(path: str, like: PyTree | None = None
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
 
 
+def _is_quantized_history(deltas) -> bool:
+    """int8 Δ-history carry (``FedConfig.compress="int8"``): a flat
+    payload/scales dict instead of the f32 client tree."""
+    return isinstance(deltas, dict) and set(deltas) == {"payload", "scales"}
+
+
+def _required_fed_keys(state: PyTree) -> tuple[str, ...]:
+    """``prev_local`` is part of the resumable state EXCEPT for the int8
+    replay carry, which provably never reads it (the strategy's estimate
+    is a pure Δ replay) and so drops it from the round state entirely."""
+    if _is_quantized_history(state.get("deltas")):
+        return tuple(k for k in FED_STATE_KEYS if k != "prev_local")
+    return FED_STATE_KEYS
+
+
 def save_fed_state(path: str, state: PyTree,
                    extra: dict | None = None) -> None:
     """Checkpoint the *full* federated state (not just params).
@@ -156,7 +171,7 @@ def save_fed_state(path: str, state: PyTree,
     the Δ history, RNG stream and round counter, which is exactly the
     "cosmetic resume" bug this helper exists to prevent.
     """
-    missing = [k for k in FED_STATE_KEYS if k not in state]
+    missing = [k for k in _required_fed_keys(state) if k not in state]
     if missing:
         raise ValueError(
             f"federated state is missing {missing}; a resumable checkpoint "
@@ -175,7 +190,7 @@ def load_fed_state(path: str, like: PyTree) -> tuple[PyTree, dict]:
     """Restore a full federated state saved by :func:`save_fed_state`;
     ``like`` is a freshly-initialized state supplying structure/dtypes."""
     state, extra = load_pytree(path, like=like)
-    missing = [k for k in FED_STATE_KEYS if k not in state]
+    missing = [k for k in _required_fed_keys(state) if k not in state]
     if missing:
         raise ValueError(f"checkpoint {path!r} lacks federated state "
                          f"keys {missing}")

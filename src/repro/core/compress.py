@@ -59,6 +59,25 @@ def dequantize_tree(q: QuantizedTree, dtype=jnp.float32) -> PyTree:
         q.payload, q.scales)
 
 
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization of an (N, P) matrix.
+
+    The row layout the fused q8 kernel consumes: one f32 scale per client
+    row (scale = max|row| / 127). Returns (payload int8 (N, P),
+    scales f32 (N,))."""
+    xf = x.astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12) / _QMAX
+    payload = jnp.clip(jnp.round(xf / scales[:, None]), -_QMAX, _QMAX
+                       ).astype(jnp.int8)
+    return payload, scales
+
+
+def dequantize_rows(payload: jax.Array, scales: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_rows` (up to the ≤ scale/2 rounding)."""
+    return (payload.astype(jnp.float32) * scales[:, None]).astype(dtype)
+
+
 def quantization_error(tree: PyTree) -> float:
     """Relative L2 error of one quantize→dequantize round trip."""
     from repro.utils.pytree import tree_norm, tree_sub

@@ -97,12 +97,25 @@ class FedConfig:
     #: participants sampled per round by the sharded executor
     #: (None = the full federation every round)
     cohort_size: int | None = None
+    #: Δ-history wire/storage format: "none" keeps f32, "int8" stores the
+    #: (N, P) history quantized per client row (fused executor only)
+    compress: str = "none"
 
     def __post_init__(self):
-        get_strategy(self.strategy)    # raises ValueError on unknown names
+        strategy = get_strategy(self.strategy)  # raises on unknown names
         if self.cohort_size is not None and self.cohort_size < 1:
             raise ValueError(
                 f"cohort_size must be >= 1, got {self.cohort_size}")
+        if self.compress not in ("none", "int8"):
+            raise ValueError(
+                f"compress must be one of ('none', 'int8'), got "
+                f"{self.compress!r}")
+        if self.compress == "int8" and not strategy.fused_capable:
+            raise ValueError(
+                f"compress='int8' stores the Δ history in int8, which only "
+                f"the fused kernel path consumes; strategy "
+                f"{self.strategy!r} is not fused-capable — use "
+                f"compress='none'")
 
     def resolve(self) -> Strategy:
         return get_strategy(self.strategy)
@@ -129,14 +142,22 @@ def _local_train(model: Classifier, params, key, cx, cy, size,
 
 
 def init_fed_state(rng, model: Classifier, n_clients: int, *,
-                   policy=None, profile=None, topology=None) -> PyTree:
+                   policy=None, profile=None, topology=None,
+                   compress: str = "none",
+                   needs_stale: bool = True) -> PyTree:
     """Fresh federated state. With ``policy`` + ``profile`` the carry also
     holds the budget-policy rows, the simulated device state and the
     energy/cost ledger (policy mode); without, the seed-era 6-key state.
     With ``topology`` (an :class:`repro.core.hierarchy.EdgeTopology`) the
     carry additionally holds the edge tier's models (``edge_params``, an
     (E,)-stacked params tree initialized to the global model — every edge
-    period starts from an exact sync)."""
+    period starts from an exact sync).
+
+    ``compress="int8"`` (fused executor only) stores the (N, P) Δ history
+    as a flat tile-padded int8 payload + per-row f32 scales instead of the
+    f32 client tree; with ``needs_stale=False`` (every strategy whose
+    estimate never reads the stale model) the O(N, P) f32 ``prev_local``
+    is dropped from the carry entirely."""
     params = model.init(rng)
     zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
     state = {
@@ -147,6 +168,19 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
         "round": jnp.zeros((), jnp.int32),
         "key": rng,
     }
+    if compress not in ("none", "int8"):
+        raise ValueError(
+            f"compress must be one of ('none', 'int8'), got {compress!r}")
+    if compress == "int8":
+        from repro.core.compress import quantize_rows
+        flat, _ = tree_ravel(params)
+        p_pad = flat.shape[0] + (-flat.shape[0]) % _FUSED_PAD
+        # zero deltas quantized: payload 0, the clamp-floor scale — exactly
+        # quantize_rows of the zero history, so resume round-trips bit-wise
+        payload, scales = quantize_rows(jnp.zeros((n_clients, p_pad)))
+        state["deltas"] = {"payload": payload, "scales": scales}
+        if not needs_stale:
+            del state["prev_local"]
     if (policy is None) != (profile is None):
         raise ValueError("policy mode needs BOTH policy and profile "
                          "(got exactly one)")
@@ -272,44 +306,85 @@ def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
 def _make_fused_round_body(model: Classifier, data: FederatedData,
                            fed: FedConfig, strategy: Strategy):
     """Route the round through the fused Pallas kernel: one HBM pass
-    computes Δ_t^i = train ? (x_K^i − x_t) : Δ_{t−1}^i, the masked mean and
-    the global update over flat (N, P) parameters."""
+    computes Δ_t^i = train ? (x_K^i − x_t) : est_i, the weighted mean and
+    the global update over flat (N, P) parameters.
+
+    The strategy specializes the kernel through its
+    :meth:`~repro.core.strategies.Strategy.fused_epilogue` coefficients
+    (every registry estimate is affine in the stored Δ and the stale-model
+    delta), so the whole registry runs fused. With
+    ``fed.compress == "int8"`` the Δ history is carried as a flat
+    tile-padded int8 payload + per-row scales and the round runs the q8
+    kernel; replay-only strategies (``needs_stale=False``) then drop the
+    f32 ``prev_local`` carry entirely."""
     from repro.kernels import ops
 
     if not strategy.fused_capable:
         raise ValueError(
-            f"strategy {strategy.name!r} is not fused-capable (the kernel "
-            "replays stored Δ verbatim); use the tree-ops path")
+            f"strategy {strategy.name!r} is not fused-capable (its estimate "
+            "is not affine in the stored Δ / stale delta); use the "
+            "tree-ops path")
+    q8 = fed.compress == "int8"
 
     def round_body(state, sel_mask, train_mask, k_active, energy=None):
         key, keys = _round_keys(state["key"], data.n_clients)
-        _, local = _train_cohort(model, fed, state["params"], keys,
-                                 data.x, data.y, data.sizes, k_active)
+        broadcast, local = _train_cohort(model, fed, state["params"], keys,
+                                         data.x, data.y, data.sizes,
+                                         k_active)
         flat_local, unravel_clients = tree_ravel_clients(local)
-        flat_deltas, _ = tree_ravel_clients(state["deltas"])
         flat_global, unravel = tree_ravel(state["params"])
         p = flat_global.shape[0]
         pad = (-p) % _FUSED_PAD
         if pad:                     # zero-pad: padded lanes stay exactly 0
             flat_local = jnp.pad(flat_local, ((0, 0), (0, pad)))
-            flat_deltas = jnp.pad(flat_deltas, ((0, 0), (0, pad)))
             flat_global = jnp.pad(flat_global, (0, pad))
         # history semantics: stored Δ only advances for sel∧train clients,
         # so that (not bare train_mask) is the kernel's train input
         upd = sel_mask & train_mask
-        new_deltas, new_global = ops.cc_delta_update(
-            flat_local, flat_deltas, flat_global,
-            upd.astype(jnp.float32), sel_mask.astype(jnp.float32),
-            block=min(65536, p + pad))
-        prev_local = masked_select(upd, local, state["prev_local"])
-        return {
+        ctx = RoundCtx(sel_mask=sel_mask, train_mask=train_mask,
+                       k_active=k_active, round=state["round"],
+                       tau=fed.tau, stale_delta=None, trained_delta=None,
+                       energy=energy)
+        ep = strategy.fused_epilogue(ctx)
+        stale_flat = None
+        if strategy.needs_stale:
+            stale = masked_select(
+                state["trained_ever"],
+                tree_sub(state["prev_local"], broadcast),
+                tree_zeros_like(broadcast))
+            stale_flat, _ = tree_ravel_clients(stale)
+            if pad:
+                stale_flat = jnp.pad(stale_flat, ((0, 0), (0, pad)))
+        updf = upd.astype(jnp.float32)
+        if q8:
+            new_payload, new_scales, new_global = ops.cc_delta_update_q8(
+                flat_local, state["deltas"]["payload"],
+                state["deltas"]["scales"], flat_global, updf, updf,
+                ep.agg_w, ep.e_replay, ep.e_stale, ep.store_scale,
+                ep.denom, ep.post_scale, stale_flat,
+                block=min(65536, p + pad))
+            new_deltas = {"payload": new_payload, "scales": new_scales}
+        else:
+            flat_deltas, _ = tree_ravel_clients(state["deltas"])
+            if pad:
+                flat_deltas = jnp.pad(flat_deltas, ((0, 0), (0, pad)))
+            new_flat, new_global = ops.cc_epilogue_update(
+                flat_local, flat_deltas, flat_global, updf, updf,
+                ep.agg_w, ep.e_replay, ep.e_stale, ep.store_scale,
+                ep.denom, ep.post_scale, stale_flat,
+                block=min(65536, p + pad))
+            new_deltas = unravel_clients(new_flat[:, :p])
+        out = {
             "params": unravel(new_global[:p]),
-            "deltas": unravel_clients(new_deltas[:, :p]),
-            "prev_local": prev_local,
+            "deltas": new_deltas,
             "trained_ever": state["trained_ever"] | upd,
             "round": state["round"] + 1,
             "key": key,
         }
+        if "prev_local" in state:
+            out["prev_local"] = masked_select(upd, local,
+                                              state["prev_local"])
+        return out
 
     return round_body
 
@@ -371,7 +446,8 @@ def make_policy_round_body(model: Classifier, data: FederatedData,
                          profile.seed)
         train_mask, new_rows = policy.decide(state["policy"], ctx)
         train_mask = train_mask & sel_mask
-        base_state = {k: state[k] for k in _BASE_KEYS}
+        # compress="int8" replay strategies carry no prev_local
+        base_state = {k: state[k] for k in _BASE_KEYS if k in state}
         new_base = base(base_state, sel_mask, train_mask, k_active,
                         energy=dev["energy"])
         spent = sel_mask & train_mask
@@ -499,6 +575,12 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
             def step(st, xs):
                 sel, train, idx = xs
                 key, keys = _round_keys(st["key"], n)
+                # at full participation the cohort IS the federation
+                # (CohortSampler degenerates to arange — pinned in tests)
+                # and the takes/scatters below are identity updates; a
+                # dedicated branch that skipped them benchmarked SLOWER
+                # than letting XLA see the uniform gather/scatter round
+                # (benchmarks/sharded_clients.py), so there is one path
                 take = functools.partial(jnp.take, indices=idx, axis=0)
                 hist = strategy.gather_history(st, idx)
                 new_params, new_hist = cohort_round(
@@ -548,6 +630,7 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
         def step(st, xs):
             sel, idx = xs
             key, keys = _round_keys(st["key"], n)
+            # one path for every cohort size — see the mask-mode note above
             take = functools.partial(jnp.take, indices=idx, axis=0)
             hist = strategy.gather_history(st, idx)
             new_params, new_hist, new_pol, train_c = cohort_round(
@@ -561,9 +644,10 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
             new_state["policy"] = jax.tree.map(
                 lambda full, part: full.at[idx].set(part),
                 st["policy"], new_pol)
-            # off-cohort clients behave exactly as unselected clients of a
-            # full round: no training spend, no ledger entry — but their
-            # devices keep harvesting and their load keeps evolving
+            # off-cohort clients behave exactly as unselected clients
+            # of a full round: no training spend, no ledger entry —
+            # but their devices keep harvesting and their load keeps
+            # evolving
             eff_sel = sel & jnp.zeros((n,), bool).at[idx].set(True)
             train_full = jnp.zeros((n,), bool).at[idx].set(train_c)
             new_state["device"] = advance_devices(

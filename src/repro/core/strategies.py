@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,33 @@ def masked_select(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
         m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
         return jnp.where(m, x, y)
     return jax.tree.map(sel, a, b)
+
+
+class FusedEpilogue(NamedTuple):
+    """Per-strategy coefficients that specialize the fused round kernels.
+
+    The fused Pallas kernels (:mod:`repro.kernels.cc_delta_update` /
+    ``cc_delta_update_q8``) compute, per client row i over flat (N, P)
+    parameters:
+
+        est_i   = e_replay_i · Δ_{t−1}^i  (+ e_stale_i · stale_i)
+        d_i     = train_i ? (x_K^i − x_t) : est_i
+        x_{t+1} = x_t + (Σ_i agg_w_i · d_i / denom) · post_scale
+        Δ_t^i   = upd_i ? (x_K^i − x_t) : store_scale_i · Δ_{t−1}^i
+
+    which is exactly the tree-ops round of :func:`repro.core.rounds.
+    _cohort_round` whenever the strategy's ``estimate`` is an affine
+    combination of the stored Δ and the stale-model delta — true for every
+    registered strategy. All members are traced values computed from the
+    round masks OUTSIDE the kernel (O(N) work), so one kernel covers the
+    whole registry.
+    """
+    agg_w: jax.Array        # (N,) f32 — per-client aggregation weight
+    e_replay: jax.Array     # (N,) f32 — estimate coefficient on stored Δ
+    e_stale: jax.Array      # (N,) f32 — estimate coefficient on stale Δ
+    store_scale: jax.Array  # (N,) f32 — Δ history decay for non-updating rows
+    denom: jax.Array        # () f32 — aggregation denominator
+    post_scale: jax.Array   # () f32 — post-mean rescale (FedNova coeff)
 
 
 @dataclass(frozen=True)
@@ -82,9 +110,16 @@ class Strategy:
 
     #: registry key; subclasses set it via their ``name`` field default
     name: str = ""
-    #: the fused Pallas round kernel implements exactly this strategy's
-    #: estimate (verbatim Δ replay) — only those may take the fast path
+    #: the fused Pallas round kernels implement this strategy's round via a
+    #: :class:`FusedEpilogue` — every strategy whose estimate is an affine
+    #: combination of stored Δ and the stale-model delta qualifies (all
+    #: registered ones); custom strategies with richer estimates must opt
+    #: out and take the tree-ops path
     fused_capable: bool = False
+    #: the strategy's estimate reads the stale-model history (prev_local);
+    #: fused runs must then feed the kernel a stale-delta input, and the
+    #: int8-compressed carry must keep the f32 prev_local tree
+    needs_stale: bool = False
 
     # ---- hooks ----------------------------------------------------------
 
@@ -103,6 +138,30 @@ class Strategy:
         """Eq. 3: unweighted masked mean over the client axis (reduced
         across shards when the client axis is shard_map'ed)."""
         return tree_masked_mean(delta_i, aggf, axis_name=ctx.axis_name)
+
+    def fused_epilogue(self, ctx: RoundCtx) -> FusedEpilogue:
+        """Coefficients the fused kernels run this strategy with. The base
+        implementation is the FedAvg family (train-only aggregation, zero
+        estimate, verbatim history): the masked mean's denominator matches
+        :func:`repro.utils.pytree.tree_masked_mean` exactly."""
+        aggf = self.agg_mask(ctx).astype(jnp.float32)
+        n = aggf.shape[0]
+        one = jnp.ones((n,), jnp.float32)
+        return FusedEpilogue(
+            agg_w=aggf,
+            e_replay=self._replay_coeff(ctx),
+            e_stale=self._stale_coeff(ctx),
+            store_scale=one,
+            denom=jnp.maximum(jnp.sum(aggf), 1e-12),
+            post_scale=jnp.ones((), jnp.float32))
+
+    def _replay_coeff(self, ctx: RoundCtx) -> jax.Array:
+        """Estimate coefficient on the stored Δ (0 = contribute nothing)."""
+        return jnp.zeros((ctx.sel_mask.shape[0],), jnp.float32)
+
+    def _stale_coeff(self, ctx: RoundCtx) -> jax.Array:
+        """Estimate coefficient on the stale-model delta."""
+        return jnp.zeros((ctx.sel_mask.shape[0],), jnp.float32)
 
     def update_history(self, state: PyTree, ctx: RoundCtx,
                        trained_delta: PyTree, local: PyTree,
@@ -184,6 +243,7 @@ class FedAvg(Strategy):
     """FedAvg(full): everyone the plan says trains, trains; skippers are
     simply absent from the round (plans decide selection)."""
     name: str = "fedavg"
+    fused_capable: bool = True
 
 
 @dataclass(frozen=True)
@@ -191,6 +251,7 @@ class FedAvgDropout(Strategy):
     """FedAvg under an energy quota — the *plan* removes a client once its
     budget is spent; round semantics are plain FedAvg."""
     name: str = "dropout"
+    fused_capable: bool = True
 
 
 @dataclass(frozen=True)
@@ -198,6 +259,7 @@ class SkipRounds(Strategy):
     """Strategy 1: skipping clients upload nothing; the server averages
     only received models."""
     name: str = "s1"
+    fused_capable: bool = True
 
 
 @dataclass(frozen=True)
@@ -205,12 +267,17 @@ class StaleModel(Strategy):
     """Strategy 2: a skipping client returns its stale local model
     x_{t-1,K}^i, i.e. contributes x_{t-1,K}^i − x_t as its delta."""
     name: str = "s2"
+    fused_capable: bool = True
+    needs_stale: bool = True
 
     def estimate(self, state, ctx):
         return ctx.stale_delta
 
     def agg_mask(self, ctx):
         return ctx.sel_mask
+
+    def _stale_coeff(self, ctx):
+        return jnp.ones((ctx.sel_mask.shape[0],), jnp.float32)
 
 
 @dataclass(frozen=True)
@@ -227,6 +294,9 @@ class CCFedAvg(Strategy):
     def agg_mask(self, ctx):
         return ctx.sel_mask
 
+    def _replay_coeff(self, ctx):
+        return jnp.ones((ctx.sel_mask.shape[0],), jnp.float32)
+
     def pod_estimate(self, deltas):
         return deltas
 
@@ -235,6 +305,8 @@ class CCFedAvg(Strategy):
 class CCFedAvgC(Strategy):
     """CC-FedAvg(c), Eq. 4: Strategy 3 before round τ, Strategy 2 after."""
     name: str = "ccc"
+    fused_capable: bool = True
+    needs_stale: bool = True
 
     def estimate(self, state, ctx):
         use_s3 = ctx.round < ctx.tau
@@ -244,6 +316,14 @@ class CCFedAvgC(Strategy):
     def agg_mask(self, ctx):
         return ctx.sel_mask
 
+    def _replay_coeff(self, ctx):
+        n = ctx.sel_mask.shape[0]
+        return jnp.where(ctx.round < ctx.tau, jnp.ones((n,), jnp.float32),
+                         jnp.zeros((n,), jnp.float32))
+
+    def _stale_coeff(self, ctx):
+        return 1.0 - self._replay_coeff(ctx)
+
 
 @dataclass(frozen=True)
 class FedNova(Strategy):
@@ -251,6 +331,19 @@ class FedNova(Strategy):
     round; aggregation normalizes each Δ by its step count, then rescales
     by the mean step count so uniform budgets reduce to FedAvg exactly."""
     name: str = "fednova"
+    fused_capable: bool = True
+
+    def fused_epilogue(self, ctx):
+        # fold the per-client 1/k_i normalization into the aggregation
+        # weight and the mean-step-count rescale into post_scale — the
+        # kernel's Σ (aggf/ka)·d / denom · coeff equals the tree-ops
+        # coeff · masked_mean(d/ka) to within one rounding
+        aggf = self.agg_mask(ctx).astype(jnp.float32)
+        ka = jnp.maximum(ctx.k_active.astype(jnp.float32), 1.0)
+        num, den = jnp.sum(aggf * ka), jnp.sum(aggf)
+        base = super().fused_epilogue(ctx)
+        return base._replace(agg_w=aggf / ka,
+                             post_scale=num / jnp.maximum(den, 1e-9))
 
     def aggregate(self, delta_i, aggf, ctx):
         ka = jnp.maximum(ctx.k_active.astype(jnp.float32), 1.0)
@@ -278,6 +371,7 @@ class CCDecay(Strategy):
     times the last real update — the replayed momentum fades instead of
     being trusted forever (CC-FedAvg is the γ=1 limit)."""
     name: str = "cc_decay"
+    fused_capable: bool = True
     gamma: float = 0.9
 
     def estimate(self, state, ctx):
@@ -285,6 +379,18 @@ class CCDecay(Strategy):
 
     def agg_mask(self, ctx):
         return ctx.sel_mask
+
+    def _replay_coeff(self, ctx):
+        n = ctx.sel_mask.shape[0]
+        return jnp.full((n,), self.gamma, jnp.float32)
+
+    def fused_epilogue(self, ctx):
+        # skipping clients store the decayed estimate γ·Δ, not Δ itself
+        base = super().fused_epilogue(ctx)
+        skipped = ctx.sel_mask & ~ctx.train_mask
+        return base._replace(
+            store_scale=jnp.where(skipped, self.gamma, 1.0
+                                  ).astype(jnp.float32))
 
     def update_history(self, state, ctx, trained_delta, local, est):
         upd = ctx.sel_mask & ctx.train_mask

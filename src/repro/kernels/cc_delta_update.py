@@ -3,7 +3,7 @@
 This is the paper's own hot spot made into one HBM pass. Per parameter
 element, given the stacked client results, Algorithm 1 lines 12/15/20/21 do:
 
-    Δ_t^i  = train_i ? (x_K^i − x_t) : Δ_{t−1}^i      (train or estimate)
+    Δ_t^i  = train_i ? (x_K^i − x_t) : Δ̂_t^i           (train or estimate)
     Δ_t    = (1/|S_t|) Σ_{i∈S_t} sel_i · Δ_t^i         (aggregate)
     x_{t+1} = x_t + Δ_t                                 (global update)
 
@@ -13,8 +13,21 @@ every operand through VMEM and produces both outputs (new per-client deltas
 + new global params) in a single pass — the op is purely HBM-bandwidth
 bound, so fewer passes is the whole game on TPU.
 
-Shapes: locals_, deltas: (N, P) — N clients, P flat params (tile-aligned);
-globals_: (P,); train/sel masks: (N,) in SMEM (scalar-prefetch).
+The kernel is parameterized by a per-strategy *epilogue*
+(:class:`repro.core.strategies.FusedEpilogue`): every strategy's estimate
+is affine in the stored Δ and the stale-model delta, so per-client f32
+coefficient rows — computed outside in O(N) — specialize one kernel body
+to the whole registry:
+
+    est_i   = e_replay_i·Δ_{t−1}^i + e_stale_i·stale_i
+    d_i     = train_i ? (x_K^i − x_t) : est_i
+    Δ_t^i   = upd_i ? (x_K^i − x_t) : store_scale_i·Δ_{t−1}^i
+    x_{t+1} = x_t + (Σ agg_w_i·d_i / denom) · post_scale
+
+Shapes: locals_, deltas (and the optional stale): (N, P) — N clients,
+P flat params; globals_: (P,); coefficient rows: (N,) f32 in SMEM
+(scalar-prefetch). P is zero-padded up to a lane-aligned block multiple
+and sliced back, so awkward (prime-ish) P never degrades the block size.
 """
 from __future__ import annotations
 
@@ -25,58 +38,115 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_LANE = 128
 
-def _cc_kernel(masks_ref, locals_ref, deltas_ref, global_ref,
-               new_deltas_ref, new_global_ref, *, n_clients: int):
+
+def _block_and_pad(p: int, block: int) -> tuple[int, int]:
+    """Lane-aligned block plus the padded P it evenly divides."""
+    p_lane = -(-p // _LANE) * _LANE
+    block = max(_LANE, min(block - block % _LANE, p_lane))
+    return block, -(-p // block) * block
+
+
+def _pad_cols(x, p_pad: int):
+    p = x.shape[-1]
+    if p == p_pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, p_pad - p)]
+    return jnp.pad(x, widths)
+
+
+def _cc_kernel(rows_ref, extras_ref, locals_ref, deltas_ref, *rest,
+               n_clients: int, has_stale: bool):
+    if has_stale:
+        stale_ref, global_ref, new_deltas_ref, new_global_ref = rest
+    else:
+        global_ref, new_deltas_ref, new_global_ref = rest
     g = global_ref[...].astype(jnp.float32)          # (1, block)
     acc = jnp.zeros_like(g)
-    denom = 1e-9
     for i in range(n_clients):                        # N is small & static
-        train_i = masks_ref[0, i]
-        sel_i = masks_ref[1, i]
+        train_i = rows_ref[0, i]
+        upd_i = rows_ref[1, i]
+        w_i = rows_ref[2, i]
         trained = locals_ref[i].astype(jnp.float32) - g[0]
-        est = deltas_ref[i].astype(jnp.float32)
+        d_old = deltas_ref[i].astype(jnp.float32)
+        est = rows_ref[3, i] * d_old
+        if has_stale:
+            est = est + rows_ref[4, i] * stale_ref[i].astype(jnp.float32)
         d_i = jnp.where(train_i > 0, trained, est)
-        new_deltas_ref[i, :] = d_i.astype(new_deltas_ref.dtype)
-        acc = acc + sel_i * d_i[None]
-        denom = denom + sel_i
-    new_global_ref[...] = (g + acc / denom).astype(new_global_ref.dtype)
+        new_deltas_ref[i, :] = jnp.where(
+            upd_i > 0, trained, rows_ref[5, i] * d_old
+        ).astype(new_deltas_ref.dtype)
+        acc = acc + w_i * d_i[None]
+    new_global_ref[...] = (
+        g + (acc / extras_ref[0]) * extras_ref[1]
+    ).astype(new_global_ref.dtype)
 
 
-def cc_delta_update_fwd(locals_, deltas, globals_, train_mask, sel_mask, *,
-                        block: int = 65536, interpret: bool = False):
-    """Fused round update.
+def cc_epilogue_update_fwd(locals_, deltas, globals_, train, upd, agg_w,
+                           e_replay, e_stale, store_scale, denom, post_scale,
+                           stale=None, *, block: int = 65536,
+                           interpret: bool = False):
+    """Strategy-parameterized fused round update.
 
-    locals_: (N, P) client post-training params; deltas: (N, P) stored Δ;
-    globals_: (P,); masks: (N,). Returns (new_deltas (N, P), new_global (P,)).
+    locals_, deltas (and stale, when given): (N, P); globals_: (P,);
+    train/upd/agg_w/e_replay/e_stale/store_scale: (N,); denom/post_scale:
+    scalars. Returns (new_deltas (N, P), new_global (P,)).
     """
     n, p = locals_.shape
-    block = min(block, p)
-    while p % block:
-        block -= 1
-    masks = jnp.stack([train_mask.astype(jnp.float32),
-                       sel_mask.astype(jnp.float32)])
-    kernel = functools.partial(_cc_kernel, n_clients=n)
+    block, p_pad = _block_and_pad(p, block)
+    rows = jnp.stack([train.astype(jnp.float32), upd.astype(jnp.float32),
+                      agg_w.astype(jnp.float32),
+                      e_replay.astype(jnp.float32),
+                      e_stale.astype(jnp.float32),
+                      store_scale.astype(jnp.float32)])
+    extras = jnp.stack([jnp.asarray(denom, jnp.float32),
+                        jnp.asarray(post_scale, jnp.float32)])
+    has_stale = stale is not None
+    kernel = functools.partial(_cc_kernel, n_clients=n, has_stale=has_stale)
+    mat_spec = pl.BlockSpec((n, block), lambda ip, rows, extras: (0, ip))
+    vec_spec = pl.BlockSpec((1, block), lambda ip, rows, extras: (0, ip))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(p // block,),
-        in_specs=[
-            pl.BlockSpec((n, block), lambda ip, masks: (0, ip)),
-            pl.BlockSpec((n, block), lambda ip, masks: (0, ip)),
-            pl.BlockSpec((1, block), lambda ip, masks: (0, ip)),
-        ],
-        out_specs=[
-            pl.BlockSpec((n, block), lambda ip, masks: (0, ip)),
-            pl.BlockSpec((1, block), lambda ip, masks: (0, ip)),
-        ],
+        num_scalar_prefetch=2,
+        grid=(p_pad // block,),
+        in_specs=[mat_spec, mat_spec] + ([mat_spec] if has_stale else [])
+        + [vec_spec],
+        out_specs=[mat_spec, vec_spec],
     )
+    operands = [_pad_cols(locals_, p_pad), _pad_cols(deltas, p_pad)]
+    if has_stale:
+        operands.append(_pad_cols(stale, p_pad))
+    operands.append(_pad_cols(globals_.reshape(1, -1), p_pad))
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((n, p), deltas.dtype),
-            jax.ShapeDtypeStruct((1, p), globals_.dtype),
+            jax.ShapeDtypeStruct((n, p_pad), deltas.dtype),
+            jax.ShapeDtypeStruct((1, p_pad), globals_.dtype),
         ],
         interpret=interpret,
-    )(masks, locals_, deltas, globals_.reshape(1, -1))
-    return out[0], out[1].reshape(-1)
+    )(rows, extras, *operands)
+    return out[0][:, :p], out[1].reshape(-1)[:p]
+
+
+def cc_delta_update_fwd(locals_, deltas, globals_, train_mask, sel_mask, *,
+                        block: int = 65536, interpret: bool = False):
+    """Legacy fused round update (bit-compatible specialization).
+
+    locals_: (N, P) client post-training params; deltas: (N, P) stored Δ;
+    globals_: (P,); masks: (N,). Returns (new_deltas (N, P), new_global (P,)).
+
+    The identity epilogue reproduces the original kernel bit-for-bit:
+    e_replay=1 and store_scale=1 multiply exactly, post_scale=1 multiplies
+    exactly, and denom = 1e-9 + Σ sel matches the old sequential mask
+    accumulation (0/1 sums are exact in f32; the 1e-9 rounds away
+    identically once any client is selected).
+    """
+    n, _ = locals_.shape
+    train = train_mask.astype(jnp.float32)
+    sel = sel_mask.astype(jnp.float32)
+    ones = jnp.ones((n,), jnp.float32)
+    return cc_epilogue_update_fwd(
+        locals_, deltas, globals_, train, train, sel, ones,
+        jnp.zeros((n,), jnp.float32), ones, 1e-9 + jnp.sum(sel),
+        jnp.ones((), jnp.float32), block=block, interpret=interpret)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cc_delta_update as _cc
+from repro.kernels import cc_delta_update_q8 as _q8
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import slstm_scan as _sl
@@ -64,3 +65,40 @@ def cc_delta_update(locals_, deltas, globals_, train_mask, sel_mask, *,
     return _cc.cc_delta_update_fwd(locals_, deltas, globals_, train_mask,
                                    sel_mask, block=block,
                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def cc_epilogue_update(locals_, deltas, globals_, train, upd, agg_w,
+                       e_replay, e_stale, store_scale, denom, post_scale,
+                       stale=None, *, block: int = 65536,
+                       interpret: bool | None = None):
+    """Strategy-parameterized fused round update (f32 history)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cc.cc_epilogue_update_fwd(
+        locals_, deltas, globals_, train, upd, agg_w, e_replay, e_stale,
+        store_scale, denom, post_scale, stale, block=block,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def cc_delta_update_q8(locals_, payload, scales, globals_, train, upd,
+                       agg_w, e_replay, e_stale, store_scale, denom,
+                       post_scale, stale=None, *, block: int = 65536,
+                       interpret: bool | None = None):
+    """Strategy-parameterized fused round update over int8 Δ history.
+
+    ``interpret=True`` (the off-TPU default) runs the vectorized XLA
+    implementation — on CPU the Pallas interpreter is pure overhead, and
+    the int8 win comes from moving/storing 4× fewer bytes, which XLA's
+    fused elementwise path already realizes. On TPU the Pallas kernel
+    compiles to Mosaic. Payload/scale outputs are bit-identical either
+    way; kernel tests pin the Pallas path directly."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if interpret:
+        return _q8.cc_delta_update_q8_jnp(
+            locals_, payload, scales, globals_, train, upd, agg_w,
+            e_replay, e_stale, store_scale, denom, post_scale, stale)
+    return _q8.cc_delta_update_q8_fwd(
+        locals_, payload, scales, globals_, train, upd, agg_w, e_replay,
+        e_stale, store_scale, denom, post_scale, stale, block=block,
+        interpret=False)

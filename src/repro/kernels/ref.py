@@ -83,3 +83,75 @@ def cc_delta_update_ref(locals_, deltas, globals_, train_mask, sel_mask):
     selw = sel_mask.astype(jnp.float32)[:, None]
     agg = jnp.sum(d * selw, axis=0) / jnp.maximum(jnp.sum(selw), 1e-9)
     return d.astype(deltas.dtype), (g + agg).astype(globals_.dtype)
+
+
+def cc_epilogue_update_ref(locals_, deltas, globals_, train, upd, agg_w,
+                           e_replay, e_stale, store_scale, denom, post_scale,
+                           stale=None):
+    """Sequential reference of the epilogue-parameterized round update.
+
+    Unrolls the client loop in the same order and with the same (1, P)
+    shapes as the Pallas kernel body, so under ``jax.jit`` (where XLA's
+    mul+add contraction decisions match the traced kernel) it is
+    bit-exact against the interpret-mode kernel."""
+    g = globals_.astype(jnp.float32).reshape(1, -1)
+    if stale is None:
+        stale = jnp.zeros_like(locals_, jnp.float32)
+    acc = jnp.zeros_like(g)
+    new_rows = []
+    trainf = train.astype(jnp.float32)
+    updf = upd.astype(jnp.float32)
+    wf = agg_w.astype(jnp.float32)
+    erf = e_replay.astype(jnp.float32)
+    esf = e_stale.astype(jnp.float32)
+    ssf = store_scale.astype(jnp.float32)
+    for i in range(locals_.shape[0]):
+        trained = locals_[i].astype(jnp.float32) - g[0]
+        d_old = deltas[i].astype(jnp.float32)
+        est = erf[i] * d_old + esf[i] * stale[i].astype(jnp.float32)
+        d_i = jnp.where(trainf[i] > 0, trained, est)
+        new_rows.append(jnp.where(updf[i] > 0, trained, ssf[i] * d_old
+                                  ).astype(deltas.dtype))
+        acc = acc + wf[i] * d_i[None]
+    new_global = g + (acc / jnp.asarray(denom, jnp.float32)) \
+        * jnp.asarray(post_scale, jnp.float32)
+    return (jnp.stack(new_rows),
+            new_global.reshape(-1).astype(globals_.dtype))
+
+
+def cc_delta_update_q8_ref(locals_, payload, scales, globals_, train, upd,
+                           agg_w, e_replay, e_stale, store_scale, denom,
+                           post_scale, stale=None):
+    """Sequential quantized tree-ops reference of the q8 round update.
+
+    Same elementwise dequant→select→requant math as the q8 kernel and the
+    same unrolled client-order f32 accumulation, so under ``jax.jit`` the
+    Pallas-interpret kernel is pinned *bit-exact* against this."""
+    from repro.kernels.cc_delta_update_q8 import q8_new_scales
+
+    g = globals_.astype(jnp.float32).reshape(1, -1)
+    if stale is None:
+        stale = jnp.zeros_like(locals_, jnp.float32)
+    updf = upd.astype(jnp.float32)
+    new_scales, inv = q8_new_scales(locals_, globals_, scales, updf,
+                                    store_scale)
+    acc = jnp.zeros_like(g)
+    new_rows = []
+    trainf = train.astype(jnp.float32)
+    wf = agg_w.astype(jnp.float32)
+    erf = e_replay.astype(jnp.float32)
+    esf = e_stale.astype(jnp.float32)
+    scf = scales.astype(jnp.float32)
+    for i in range(locals_.shape[0]):
+        q = payload[i].astype(jnp.float32)
+        deq = q * scf[i]
+        trained = locals_[i].astype(jnp.float32) - g[0]
+        est = erf[i] * deq + esf[i] * stale[i].astype(jnp.float32)
+        d_i = jnp.where(trainf[i] > 0, trained, est)
+        newq = jnp.clip(jnp.round(trained * inv[i]), -127.0, 127.0)
+        new_rows.append(jnp.where(updf[i] > 0, newq, q).astype(jnp.int8))
+        acc = acc + wf[i] * d_i[None]
+    new_global = (g + (acc / jnp.asarray(denom, jnp.float32))
+                  * jnp.asarray(post_scale, jnp.float32))
+    return (jnp.stack(new_rows), new_scales,
+            new_global.reshape(-1).astype(globals_.dtype))

@@ -1,0 +1,176 @@
+"""int8 Δ-history carry (``compress="int8"``) — config validation, the
+dropped/kept ``prev_local`` rule, measured wire bytes, and bit-identical
+checkpoint resume of the quantized state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, Session
+from repro.core import strategies as strat_mod
+from repro.core.compress import BYTES_PER_PARAM_F32
+from repro.core.rounds import FedConfig, init_fed_state
+from repro.core.schedules import make_plan
+from repro.core.strategies import Strategy, get_strategy
+from repro.data.federated import build_federated
+from repro.data.partition import partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+
+N = 4
+
+
+def _spec(strategy="cc", **kw) -> ExperimentSpec:
+    base = dict(dataset="gaussian", n_samples=256, dim=8, n_classes=4,
+                n_clients=N, model="mlp", width=4, strategy=strategy,
+                local_steps=2, batch_size=16, lr=0.1, schedule="adhoc",
+                budget="power", beta=2, rounds=6, eval_every=2, seed=0,
+                executor="scan", use_fused=True, compress="int8")
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("gaussian", n=256, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, N, gamma=0.5, seed=0))
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    return model, fd
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_fedconfig_rejects_unknown_compress():
+    with pytest.raises(ValueError, match="compress"):
+        FedConfig(strategy="cc", compress="fp8")
+
+
+def test_fedconfig_rejects_int8_for_non_fused_capable_strategy():
+    """A strategy without a ``FusedEpilogue`` has no int8 kernel path —
+    the config must refuse up front, not fail inside a traced round."""
+    register_name = "_tmp_treeops_only"
+    strat_mod.register(Strategy(name=register_name))
+    try:
+        assert not get_strategy(register_name).fused_capable
+        with pytest.raises(ValueError, match="fused"):
+            FedConfig(strategy=register_name, compress="int8")
+    finally:
+        del strat_mod._REGISTRY[register_name]
+
+
+def test_spec_rejects_bad_compress():
+    with pytest.raises(ValueError, match="compress"):
+        _spec(compress="fp8")
+    with pytest.raises(ValueError, match="use_fused"):
+        _spec(use_fused=False)
+
+
+def test_session_rejects_int8_without_fused(setup):
+    model, fd = setup
+    with pytest.raises(ValueError, match="use_fused"):
+        Session(model, fd,
+                FedConfig(strategy="cc", local_steps=2, compress="int8"),
+                make_plan("full", np.ones(N), 2), executor="scan",
+                use_fused=False)
+
+
+def test_init_fed_state_rejects_unknown_compress(setup):
+    model, _ = setup
+    with pytest.raises(ValueError, match="compress"):
+        init_fed_state(jax.random.PRNGKey(0), model, N, compress="fp8")
+
+
+# ---------------------------------------------------------------------------
+# carry shape: quantized history, prev_local dropped only for replay
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_carry_drops_prev_local_for_replay_strategies():
+    sess = Session.from_spec(_spec("cc"))
+    q = sess.state["deltas"]
+    assert set(q) == {"payload", "scales"}
+    assert q["payload"].dtype == jnp.int8
+    assert q["payload"].shape[0] == N and q["scales"].shape == (N,)
+    assert q["payload"].shape[1] % 512 == 0          # tile-padded flat P
+    assert "prev_local" not in sess.state
+
+
+@pytest.mark.parametrize("strategy", ["s2", "ccc"])
+def test_quantized_carry_keeps_prev_local_for_stale_strategies(strategy):
+    """s2/ccc estimate from the stale model — the f32 ``prev_local`` tree
+    must stay in the carry even with the int8 Δ history."""
+    assert get_strategy(strategy).needs_stale
+    sess = Session.from_spec(_spec(strategy))
+    assert set(sess.state["deltas"]) == {"payload", "scales"}
+    assert "prev_local" in sess.state
+
+
+# ---------------------------------------------------------------------------
+# cost report: measured int8 bytes vs f32 accounting
+# ---------------------------------------------------------------------------
+
+
+def test_cost_report_measures_int8_wire_bytes():
+    sess = Session.from_spec(_spec("cc")).run()
+    rep = sess.cost_report()
+    assert rep["upload_bytes_int8_measured"] is True
+    # one quantized upload = int8 payload row + one f32 scale: strictly
+    # between 1/4 of f32 (scales add) and, say, 30% of it (tile padding)
+    assert 0 < rep["upload_bytes_int8"] < rep["upload_bytes"]
+    assert rep["upload_bytes_int8"] >= rep["upload_bytes"] // 4 // 2
+
+
+def test_cost_report_accounted_without_compression():
+    sess = Session.from_spec(_spec("cc", compress="none")).run()
+    rep = sess.cost_report()
+    assert rep["upload_bytes_int8_measured"] is False
+    assert rep["upload_bytes_int8"] == (rep["upload_bytes"]
+                                        // BYTES_PER_PARAM_F32)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: quantized state resumes bit-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["cc", "ccc"])
+def test_save_restore_resumes_bit_identical(tmp_path, strategy):
+    spec = _spec(strategy)
+    sess = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    sess.run(3)
+    sess.save()
+    sess.run()
+    final = sess.state
+
+    sess2 = Session.restore_from(str(tmp_path))
+    assert sess2.t == 3
+    sess2.run()
+    resumed = sess2.state
+    assert set(final) == set(resumed)
+
+    def _flat(state):
+        return {".".join(str(p) for p in path):
+                np.asarray(jax.random.key_data(leaf)
+                           if jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key)
+                           else leaf)
+                for path, leaf
+                in jax.tree_util.tree_flatten_with_path(state)[0]}
+
+    fa, fb = _flat(final), _flat(resumed)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_array_equal(fa[k], fb[k], err_msg=k)
+
+
+def test_q8_run_tracks_f32_run():
+    """End-to-end sanity on top of the matrix pins: the quantized run's
+    final params stay within the ISSUE's 1e-2 of the exact fused run."""
+    q8 = Session.from_spec(_spec("cc")).run()
+    f32 = Session.from_spec(_spec("cc", compress="none")).run()
+    for a, b in zip(jax.tree.leaves(q8.state["params"]),
+                    jax.tree.leaves(f32.state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-2)

@@ -51,10 +51,16 @@ from repro.launch.mesh import (best_client_shards, best_edge_shards,
 from repro.models.simple import make_classifier
 
 N = 4
-EXECUTORS = ("python", "scan", "fused", "sharded", "hier_single_edge",
-             "hier_sync_every_round")
+EXECUTORS = ("python", "scan", "fused", "fused_q8", "sharded",
+             "hier_single_edge", "hier_sync_every_round")
 VARIANTS = ("client", "server", "mixed")
 ATOL = 1e-5
+#: the quantized fused cells carry int8 Δ history — vs the exact f32
+#: oracle the params budget is the ISSUE's 1e-2; the metric stream gets
+#: 2.5e-2 because the 51-sample test set quantizes accuracy in steps of
+#: 1/51 ≈ 0.0196 (a single flipped prediction would breach 1e-2)
+Q8_ATOL_PARAMS = 1e-2
+Q8_ATOL_ACCS = 2.5e-2
 
 #: the hierarchical collapse configurations: a single edge running 3-round
 #: periods, and N single-client edges syncing every round
@@ -63,7 +69,8 @@ HIER_CELLS = {"hier_single_edge": dict(n_edges=1, edge_period=3),
 
 
 def _spec(strategy: str, executor: str) -> ExperimentSpec:
-    use_fused = executor == "fused"
+    use_fused = executor in ("fused", "fused_q8")
+    compress = "int8" if executor == "fused_q8" else "none"
     extra = {}
     if executor in HIER_CELLS:
         extra = dict(topology="contiguous", **HIER_CELLS[executor])
@@ -74,7 +81,7 @@ def _spec(strategy: str, executor: str) -> ExperimentSpec:
         strategy=strategy, local_steps=2, batch_size=16, lr=0.1,
         schedule="adhoc", rounds=6, eval_every=2, seed=0,
         executor="scan" if use_fused else executor, use_fused=use_fused,
-        **extra)
+        compress=compress, **extra)
 
 
 _RUNS: dict = {}
@@ -95,15 +102,19 @@ def _run(strategy: str, executor: str):
 @pytest.mark.parametrize("strategy", available_strategies())
 @pytest.mark.parametrize("executor", EXECUTORS)
 def test_matrix_matches_python_oracle(executor, strategy, variant):
-    if executor == "fused" and not get_strategy(strategy).fused_capable:
+    if (executor in ("fused", "fused_q8")
+            and not get_strategy(strategy).fused_capable):
         pytest.skip(f"{strategy} is not fused-capable")
+    q8 = executor == "fused_q8"
+    atol_params = Q8_ATOL_PARAMS if q8 else ATOL
+    atol_accs = Q8_ATOL_ACCS if q8 else ATOL
     oracle_params, oracle_accs, _ = _run(strategy, "python")
     params, accs, sess = _run(strategy, executor)
-    np.testing.assert_allclose(accs, oracle_accs, atol=ATOL,
+    np.testing.assert_allclose(accs, oracle_accs, atol=atol_accs,
                                err_msg=f"{executor}/{strategy} metric "
                                        "stream diverged")
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(oracle_params)):
-        np.testing.assert_allclose(a, b, atol=ATOL,
+        np.testing.assert_allclose(a, b, atol=atol_params,
                                    err_msg=f"{executor}/{strategy} params")
     # the variant axis: identical numerics, distinct cost accounting
     rep = sess.cost_report(variant=variant)
@@ -115,6 +126,17 @@ def test_matrix_covers_every_registered_strategy():
     covered the moment it registers."""
     assert set(available_strategies()) >= {
         "fedavg", "dropout", "s1", "s2", "cc", "ccc", "fednova", "cc_decay"}
+
+
+def test_fused_columns_skip_at_most_four_cells():
+    """The fused-coverage satellite pin: with every registered strategy
+    carrying a ``FusedEpilogue``, the matrix's two fused columns may skip
+    at most 4 cells total (they skipped 21 when only cc was capable)."""
+    non_capable = [s for s in available_strategies()
+                   if not get_strategy(s).fused_capable]
+    skipped_cells = len(non_capable) * len(VARIANTS) * 2   # fused + fused_q8
+    assert skipped_cells <= 4, (
+        f"{non_capable} lack fused epilogues → {skipped_cells} skipped cells")
 
 
 # ---------------------------------------------------------------------------
@@ -142,7 +164,9 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
     EXACTLY (``assert_array_equal``, not allclose) for every schedule kind
     under every executor — the static-plan era is a strict special case."""
     model, fd = policy_setup
-    fed = FedConfig(strategy="cc", local_steps=2, batch_size=16, lr=0.1)
+    compress = "int8" if executor == "fused_q8" else "none"
+    fed = FedConfig(strategy="cc", local_steps=2, batch_size=16, lr=0.1,
+                    compress=compress)
     p = budget_law(N, beta=2)
     rounds = 6
     plan = make_plan(kind, p, rounds, seed=2)
@@ -152,6 +176,9 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
     profile = make_profile("budget", p, seed=0)
 
     def fresh(**kw):
+        if compress == "int8":       # cc's replay estimate never reads
+            kw.update(compress=compress,   # the stale model
+                      needs_stale=fed.resolve().needs_stale)
         return init_fed_state(jax.random.PRNGKey(0), model, N, **kw)
 
     if executor == "python":
@@ -163,8 +190,8 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
         s_pol = fresh(policy=policy, profile=profile)
         for t in range(rounds):
             s_pol = prf(s_pol, sel[t], k)
-    elif executor in ("scan", "fused"):
-        fused = executor == "fused"
+    elif executor in ("scan", "fused", "fused_q8"):
+        fused = executor in ("fused", "fused_q8")
         s_mask = make_span_runner(model, fd, fed, fused=fused)(
             fresh(), sel, train, k)
         s_pol = make_policy_span_runner(model, fd, fed, policy, profile,
@@ -188,7 +215,11 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
             profile=profile)(fresh(policy=policy, profile=profile),
                              sel, k, idx)
 
+    # the q8 replay carry drops prev_local — compare the keys present
     for key in ("params", "deltas", "prev_local", "trained_ever"):
+        if key not in s_mask:
+            assert key not in s_pol, f"{key} only in policy-mode state"
+            continue
         for a, b in zip(jax.tree.leaves(s_mask[key]),
                         jax.tree.leaves(s_pol[key])):
             np.testing.assert_array_equal(

@@ -175,6 +175,7 @@ def test_slstm_kernel_matches_model_block(rng):
     (4, 512, 128),
     (8, 1000, 256),      # p not a multiple of requested block
     (1, 256, 256),       # single client
+    (3, 509, 512),       # prime P < block: pad-to-tile fallback regression
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_cc_delta_update(rng, n, p, block, dtype):
@@ -212,3 +213,158 @@ def test_cc_delta_update_equals_engine_round(rng):
                                atol=1e-6)
     np.testing.assert_allclose(np.asarray(g_new), np.asarray(want_g),
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# strategy-parameterized epilogue update + int8 (q8) quantized history
+# ---------------------------------------------------------------------------
+
+
+def _epilogue_case(rng, n, p, *, with_stale):
+    """Random FusedEpilogue-shaped inputs (coefficients in strategy range)."""
+    ks = jax.random.split(rng, 9)
+    locals_ = jax.random.normal(ks[0], (n, p))
+    deltas = 0.1 * jax.random.normal(ks[1], (n, p))
+    globals_ = jax.random.normal(ks[2], (p,))
+    train = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(jnp.float32)
+    agg_w = jax.random.uniform(ks[4], (n,))
+    e_replay = jax.random.uniform(ks[5], (n,))
+    e_stale = (jax.random.uniform(ks[6], (n,)) if with_stale
+               else jnp.zeros((n,)))
+    store_scale = jax.random.uniform(ks[7], (n,), minval=0.5, maxval=1.0)
+    stale = (0.05 * jax.random.normal(ks[8], (n, p)) if with_stale
+             else None)
+    denom = jnp.maximum(jnp.sum(agg_w), jnp.float32(1e-12))
+    post = jnp.float32(1.25)
+    return (locals_, deltas, globals_, train, train, agg_w, e_replay,
+            e_stale, store_scale, denom, post, stale)
+
+
+@pytest.mark.parametrize("n,p,block", [
+    (4, 512, 128),
+    (8, 1000, 256),
+    (3, 509, 512),       # prime P < block
+])
+@pytest.mark.parametrize("with_stale", [False, True])
+def test_cc_epilogue_update_bit_exact_vs_ref(rng, n, p, block, with_stale):
+    """The epilogue kernel is pinned BIT-EXACT against the unrolled
+    sequential reference — refs are compared under jit (eager XLA makes
+    different mul+add contraction choices and is 1 ulp off)."""
+    case = _epilogue_case(rng, n, p, with_stale=with_stale)
+    d1, g1 = ops.cc_epilogue_update(*case, block=block, interpret=True)
+    d2, g2 = jax.jit(ref.cc_epilogue_update_ref)(*case)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_cc_epilogue_identity_equals_legacy_kernel(rng):
+    """The legacy 5-arg op is exactly the identity epilogue: agg_w=sel,
+    e_replay=1, e_stale=0, store_scale=1, denom=1e-9+Σsel, post=1."""
+    n, p = 4, 512
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    locals_ = jax.random.normal(k1, (n, p))
+    deltas = 0.1 * jax.random.normal(k2, (n, p))
+    globals_ = jax.random.normal(k3, (p,))
+    train = (jax.random.uniform(k4, (n,)) > 0.5).astype(jnp.float32)
+    sel = jnp.ones((n,), jnp.float32)
+    d1, g1 = ops.cc_delta_update(locals_, deltas, globals_, train, sel,
+                                 interpret=True)
+    d2, g2 = ops.cc_epilogue_update(
+        locals_, deltas, globals_, train, train, sel, jnp.ones((n,)),
+        jnp.zeros((n,)), jnp.ones((n,)), 1e-9 + jnp.sum(sel),
+        jnp.float32(1.0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def _q8_case(rng, n, p, *, with_stale):
+    from repro.core.compress import quantize_rows
+    case = _epilogue_case(rng, n, p, with_stale=with_stale)
+    locals_, deltas = case[0], case[1]
+    payload, scales = quantize_rows(deltas)
+    return (locals_, payload, scales) + case[2:]
+
+
+@pytest.mark.parametrize("n,p,block", [
+    (4, 512, 128),
+    (8, 1000, 256),
+    (3, 509, 512),       # prime P < block
+])
+@pytest.mark.parametrize("with_stale", [False, True])
+def test_cc_delta_update_q8_bit_exact_vs_ref(rng, n, p, block, with_stale):
+    """The int8 dequant→select/aggregate→requant kernel is pinned
+    BIT-EXACT (payload, scales AND aggregated global) against the
+    sequential quantized reference, compared under jit."""
+    import functools
+    from repro.kernels.cc_delta_update_q8 import cc_delta_update_q8_fwd
+    case = _q8_case(rng, n, p, with_stale=with_stale)
+    q1, s1, g1 = jax.jit(functools.partial(
+        cc_delta_update_q8_fwd, block=block, interpret=True))(*case)
+    q2, s2, g2 = jax.jit(ref.cc_delta_update_q8_ref)(*case)
+    assert q1.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+@pytest.mark.parametrize("with_stale", [False, True])
+def test_cc_delta_update_q8_jnp_matches_pallas(rng, with_stale):
+    """The vectorized XLA path (what ``ops.cc_delta_update_q8`` dispatches
+    to off-TPU) produces bit-identical payload/scales to the Pallas
+    kernel; only the f32 summation order of the global differs."""
+    import functools
+    from repro.kernels.cc_delta_update_q8 import (cc_delta_update_q8_fwd,
+                                                  cc_delta_update_q8_jnp)
+    case = _q8_case(rng, 6, 640, with_stale=with_stale)
+    q1, s1, g1 = jax.jit(functools.partial(
+        cc_delta_update_q8_fwd, block=256, interpret=True))(*case)
+    q2, s2, g2 = jax.jit(cc_delta_update_q8_jnp)(*case)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+@pytest.mark.parametrize("with_stale", [False, True])
+def test_q8_chunked_row_maxima_path_bit_exact(rng, with_stale):
+    """Above ``_MX_MIN_COLS`` the jnp path switches to the chunked
+    accumulator row-maxima (with upd-row skipping and a strided tail) —
+    max is exactly associative, so payload/scales must stay bit-identical
+    to the plain-reduce formula and to the Pallas kernel."""
+    import functools
+    from repro.kernels import cc_delta_update_q8 as q8
+    n, p = 5, q8._MX_MIN_COLS + 509        # chunk loop + odd tail
+    assert p >= q8._MX_MIN_COLS
+    case = list(_q8_case(rng, n, p, with_stale=with_stale))
+    case[5] = jnp.array([1.0, 0.0, 1.0, 1.0, 0.0])       # upd mix: skip path
+    q1, s1, g1 = jax.jit(functools.partial(
+        q8.cc_delta_update_q8_fwd, block=16384, interpret=True))(*case)
+    q2, s2, g2 = jax.jit(q8.cc_delta_update_q8_jnp)(*case)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+    # and the chunked maxima themselves equal the plain reduce, bit for bit
+    mx_plain = jnp.max(jnp.abs(case[0] - case[3][None]), axis=1)
+    mx_chunk = jax.jit(q8._row_maxima)(case[0], case[3], case[5])
+    upd = np.asarray(case[5]) > 0
+    np.testing.assert_array_equal(np.asarray(mx_chunk)[upd],
+                                  np.asarray(mx_plain)[upd])
+
+
+def test_q8_non_update_rows_keep_payload(rng):
+    """Rows with upd=0 must keep their int8 payload byte-identical (no
+    requantization drift round over round) — only the scale is folded by
+    ``store_scale`` (the decay-in-scale trick)."""
+    n, p = 4, 512
+    (locals_, payload, scales, _, _, _, agg_w, e_replay, e_stale,
+     _, denom, post, _) = _q8_case(rng, n, p, with_stale=False)
+    upd = jnp.array([1.0, 0.0, 1.0, 0.0])
+    store = jnp.array([1.0, 0.9, 1.0, 1.0])
+    q, s, _ = ops.cc_delta_update_q8(
+        locals_, payload, scales, jnp.zeros((p,)), upd, upd, agg_w,
+        e_replay, e_stale, store, denom, post)
+    np.testing.assert_array_equal(np.asarray(q[1]), np.asarray(payload[1]))
+    np.testing.assert_array_equal(np.asarray(q[3]), np.asarray(payload[3]))
+    np.testing.assert_allclose(np.asarray(s[1]),
+                               np.asarray(scales[1]) * 0.9, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s[3]), np.asarray(scales[3]))
+    assert not np.array_equal(np.asarray(q[0]), np.asarray(payload[0]))

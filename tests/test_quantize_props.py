@@ -1,0 +1,74 @@
+"""Property tests for the per-row int8 quantizer the q8 kernel consumes.
+
+Runs under real hypothesis when installed; otherwise the deterministic
+replay shim from ``_hypothesis_compat`` (bounds examples + seeded draws).
+All three properties are *analytic* bounds of symmetric quantization, not
+empirical tolerances:
+
+* round trip: |x − deq(q(x))| ≤ scale/2 per element (scale = max|row|/127
+  ⇒ x/scale ∈ [−127, 127], the clip never bites, round is ≤ 1/2 off);
+* zeros are a fixed point: payload 0, the clamp-floor scale, exact
+  dequantization;
+* masked-mean aggregation: |mean_sel(x) − mean_sel(deq(q(x)))| ≤
+  mean_sel(scale_i)/2 — the per-row bounds average.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compress import dequantize_rows, quantize_rows
+
+_SLACK = 1 + 1e-5          # f32 rounding headroom on the analytic bounds
+
+
+def _rows(n, p, seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, p))
+    return (scale * x).astype(jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 8), p=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 16),
+       scale=st.floats(min_value=1e-5, max_value=1e3))
+def test_round_trip_error_within_half_scale(n, p, seed, scale):
+    x = _rows(n, p, seed, scale)
+    payload, scales = quantize_rows(x)
+    assert payload.dtype == jnp.int8 and scales.shape == (n,)
+    back = dequantize_rows(payload, scales)
+    err = np.abs(np.asarray(x) - np.asarray(back))
+    bound = np.asarray(scales)[:, None] * 0.5 * _SLACK
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 8), p=st.integers(1, 300))
+def test_zeros_are_a_fixed_point(n, p):
+    payload, scales = quantize_rows(jnp.zeros((n, p)))
+    assert not np.asarray(payload).any()
+    assert (np.asarray(scales) > 0).all()      # the 1e-12 clamp floor
+    assert not np.asarray(dequantize_rows(payload, scales)).any()
+    payload2, scales2 = quantize_rows(dequantize_rows(payload, scales))
+    np.testing.assert_array_equal(np.asarray(payload2), np.asarray(payload))
+    np.testing.assert_array_equal(np.asarray(scales2), np.asarray(scales))
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 8), p=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 16),
+       scale=st.floats(min_value=1e-5, max_value=1e3),
+       mask_seed=st.integers(0, 2 ** 16))
+def test_masked_mean_aggregation_within_analytic_bound(n, p, seed, scale,
+                                                       mask_seed):
+    x = _rows(n, p, seed, scale)
+    sel = jax.random.bernoulli(jax.random.PRNGKey(mask_seed), 0.5, (n,))
+    sel = sel.at[0].set(True)                  # at least one participant
+    payload, scales = quantize_rows(x)
+    back = dequantize_rows(payload, scales)
+    w = np.asarray(sel, np.float32)
+    m = w.sum()
+    exact = (w[:, None] * np.asarray(x)).sum(0) / m
+    approx = (w[:, None] * np.asarray(back)).sum(0) / m
+    bound = (w * np.asarray(scales)).sum() / m * 0.5 * _SLACK
+    assert (np.abs(exact - approx) <= bound).all()

@@ -288,9 +288,21 @@ def test_fused_end_to_end_matches(setup):
 
 
 def test_fused_requires_capable_strategy(setup):
+    """Every built-in strategy carries a ``FusedEpilogue`` now, so the
+    rejection path only triggers for custom strategies registered without
+    one (``fused_capable`` defaults to False)."""
+    from repro.core import strategies as strat_mod
+
     model, fd, _ = setup
-    with pytest.raises(ValueError, match="not fused-capable"):
-        make_round_fn(model, fd, FedConfig(strategy="s2"), fused=True)
+    name = "_tmp_no_epilogue"
+    strat_mod.register(strat_mod.Strategy(name=name))
+    try:
+        with pytest.raises(ValueError, match="not fused-capable"):
+            make_round_fn(model, fd, FedConfig(strategy=name), fused=True)
+    finally:
+        del strat_mod._REGISTRY[name]
+    for builtin in strat_mod.available_strategies():
+        assert strat_mod.get_strategy(builtin).fused_capable
 
 
 # ---------------------------------------------------------------------------

@@ -76,9 +76,15 @@ def test_register_requires_name_and_allows_plugins():
 
 
 def test_fused_capability_flags():
-    assert get_strategy("cc").fused_capable
-    for name in ("s1", "s2", "ccc", "fednova", "cc_decay"):
-        assert not get_strategy(name).fused_capable
+    """Every built-in strategy ships a ``FusedEpilogue``; only the bare
+    ``Strategy`` base (custom registrations) defaults to non-capable."""
+    from repro.core.strategies import Strategy, available_strategies
+
+    for name in available_strategies():
+        s = get_strategy(name)
+        assert s.fused_capable, name
+        assert s.needs_stale == (name in ("s2", "ccc")), name
+    assert not Strategy(name="_probe").fused_capable
 
 
 # ---------------------------------------------------------------------------
