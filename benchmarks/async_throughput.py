@@ -1,0 +1,234 @@
+"""Async executor throughput + history-store memory scaling.
+
+Two measurements in one harness:
+
+* **executor overhead** — the buffered-async executor at its collapse
+  point (zero latency, ``buffer_size=1``) against the flat scan executor:
+  structurally the same per-round work plus the dispatch/buffer/merge
+  machinery, so its overhead ratio is the pure cost of the async
+  bookkeeping. A non-collapse cell (buffered merges + latency) reports
+  realized arrivals/s.
+* **history-store scaling** — dense f32 vs sharded int8
+  :class:`repro.core.history_store.HistoryStore` at parameter width P,
+  swept over client counts up to N = 10⁵: carry bytes (the acceptance
+  bound: int8 ≤ 30% of dense at P = 1024) and cohort gather+scatter
+  throughput (rows/s), the two operations estimation replay pays per
+  round.
+
+Emits machine-readable results to ``BENCH_async.json`` (``--json`` to
+change the path, empty string to disable). CI smoke-runs it on a
+4-virtual-device host (``XLA_FLAGS=--xla_force_host_platform_device_
+count=4``) with ``--max-overhead`` as a regression budget on the
+collapse cell.
+
+    PYTHONPATH=src python benchmarks/async_throughput.py [--clients 64]
+        [--rounds 30] [--reps 3] [--buffer 4] [--latency 2.0]
+        [--store-clients 1000,10000,100000] [--store-width 1024]
+        [--max-overhead 2.0]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_rounds import AsyncConfig, make_async_span_runner
+from repro.core.history_store import HistoryStore
+from repro.core.rounds import (FedConfig, init_fed_state, make_span_runner)
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+from repro.system.devices import make_profile, simulate_arrivals
+
+
+def _block(x):
+    jax.block_until_ready(jax.tree.leaves(x)[0])
+
+
+def _bench_executor(args, fed, model, fd, plan, profile):
+    n = args.clients
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+
+    runner = make_span_runner(model, fd, fed)
+    _block(runner(init_fed_state(jax.random.PRNGKey(0), model, n),
+                  sel, train, k))
+    t_flat = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, n)
+        t0 = time.perf_counter()
+        _block(runner(state, sel, train, k))
+        t_flat.append(time.perf_counter() - t0)
+    flat_s = min(t_flat)
+    print(f"flat scan:                 {flat_s * 1e3:8.1f} ms "
+          f"({n * args.rounds / flat_s:9.1f} client-rounds/s)")
+
+    cells = []
+    for label, cfg in [
+            ("collapse", AsyncConfig()),
+            ("buffered", AsyncConfig(buffer_size=min(args.buffer, n),
+                                     latency=args.latency, jitter=0.5,
+                                     staleness_decay=0.8))]:
+        sched_np = simulate_arrivals(profile, np.asarray(plan.selection),
+                                     buffer_size=cfg.buffer_size,
+                                     latency=cfg.latency, jitter=cfg.jitter)
+        sched = tuple(jnp.asarray(x) for x in sched_np)
+        arun = make_async_span_runner(model, fd, fed, cfg)
+
+        def fresh():
+            from repro.core.async_rounds import init_async_carry
+            st = init_fed_state(jax.random.PRNGKey(0), model, n)
+            return init_async_carry(st, st["params"], n, cfg)
+
+        _block(arun(fresh(), train, k, sched))
+        times = []
+        for _ in range(args.reps):
+            state = fresh()
+            t0 = time.perf_counter()
+            _block(arun(state, train, k, sched))
+            times.append(time.perf_counter() - t0)
+        best = min(times)
+        arrivals = int(sched_np.deliver.sum())
+        overhead = best / flat_s
+        cells.append({"cell": label, "buffer_size": cfg.buffer_size,
+                      "latency": cfg.latency, "total_s": best,
+                      "ms_per_round": best / args.rounds * 1e3,
+                      "arrivals": arrivals,
+                      "arrivals_per_second": arrivals / best,
+                      "overhead_vs_flat": overhead})
+        print(f"async {label:9s} (K={cfg.buffer_size}): "
+              f"{best * 1e3:8.1f} ms ({arrivals / best:9.1f} arrivals/s, "
+              f"{overhead:.2f}x flat)")
+        print(f"csv,async,{label},{cfg.buffer_size},{best * 1e6:.0f}")
+    return flat_s, cells
+
+
+def _bench_store(args):
+    """Carry bytes + cohort gather/scatter rates, dense vs int8."""
+    width = args.store_width
+    cohort = args.cohort
+    rows_out = []
+    rng = np.random.default_rng(0)
+    upd = jnp.asarray(rng.standard_normal((cohort, width)), jnp.float32)
+    for n in [int(v) for v in args.store_clients.split(",") if v]:
+        idx = jnp.asarray(rng.choice(n, size=min(cohort, n), replace=False))
+        entry = {"n_clients": n, "width": width}
+        for kind in ("dense", "int8"):
+            store = HistoryStore(n, width, kind=kind)
+            carry = store.init()
+            nbytes = HistoryStore.carry_bytes(carry)
+            assert nbytes == store.nbytes()
+
+            def step(c):
+                got = store.read(c, idx)
+                return store.scatter(c, idx, got + upd[:idx.shape[0]])
+
+            step = jax.jit(step)
+            carry = step(carry)               # compile + warm
+            _block(carry)
+            times = []
+            for _ in range(args.reps):
+                t0 = time.perf_counter()
+                c = carry
+                for _ in range(args.store_iters):
+                    c = step(c)
+                _block(c)
+                times.append(time.perf_counter() - t0)
+            best = min(times)
+            rate = args.store_iters * idx.shape[0] / best
+            entry[kind] = {"history_bytes": nbytes,
+                           "gather_scatter_rows_per_second": rate,
+                           "total_s": best}
+            print(f"store {kind:5s} N={n:7d} P={width}: "
+                  f"{nbytes / 1e6:9.1f} MB  ({rate:12.1f} rows/s)")
+        ratio = (entry["int8"]["history_bytes"]
+                 / entry["dense"]["history_bytes"])
+        entry["int8_bytes_ratio"] = ratio
+        print(f"csv,store,{n},{ratio:.4f}")
+        rows_out.append(entry)
+    return rows_out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--buffer", type=int, default=4,
+                    help="K of the non-collapse async cell")
+    ap.add_argument("--latency", type=float, default=2.0,
+                    help="nominal latency of the non-collapse cell")
+    ap.add_argument("--store-clients", default="1000,10000,100000",
+                    help="comma-separated N sweep for the history store")
+    ap.add_argument("--store-width", type=int, default=1024)
+    ap.add_argument("--store-iters", type=int, default=10,
+                    help="gather+scatter iterations per timing rep")
+    ap.add_argument("--cohort", type=int, default=256,
+                    help="cohort rows per gather/scatter")
+    ap.add_argument("--max-overhead", type=float, default=0.0,
+                    help="fail (exit 1) if the collapse cell's time "
+                         "exceeds this multiple of the flat scan path "
+                         "(0 = report only)")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_async.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+
+    n = args.clients
+    ds = make_dataset("teacher", n=4096, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, n, gamma=0.5, seed=0))
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    p = budget_law(n, beta=4)
+    plan = make_plan("adhoc", p, args.rounds, seed=0)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=32, lr=0.1)
+    profile = make_profile("budget", p, seed=0)
+
+    print(f"clients={n} rounds={args.rounds} devices={len(jax.devices())} "
+          f"(best of {args.reps})")
+    flat_s, exec_cells = _bench_executor(args, fed, model, fd, plan,
+                                         profile)
+    store_rows = _bench_store(args)
+
+    if args.json:
+        payload = {
+            "bench": "async_throughput",
+            "config": {"clients": n, "rounds": args.rounds,
+                       "local_steps": args.local_steps, "reps": args.reps,
+                       "store_width": args.store_width,
+                       "cohort": args.cohort,
+                       "devices": len(jax.devices())},
+            "flat_scan_s": flat_s,
+            "executor_cells": exec_cells,
+            "history_store": store_rows,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    if args.max_overhead:
+        collapse = next(c for c in exec_cells if c["cell"] == "collapse")
+        if collapse["overhead_vs_flat"] > args.max_overhead:
+            print(f"FAIL: collapse overhead "
+                  f"{collapse['overhead_vs_flat']:.2f}x exceeds budget "
+                  f"{args.max_overhead:.2f}x")
+            return 1
+        print(f"collapse overhead {collapse['overhead_vs_flat']:.2f}x "
+              f"within budget {args.max_overhead:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,20 @@ heterogeneity rides ``--set edge_speed=[1.0,0.5]``:
         --topology contiguous --edges 4 --edge-period 5
     python -m repro sweep exp.json --set executor=hierarchical \
         --topology contiguous --edges 4 --grid edge_period=1,5,10
+
+Asynchronous federation: ``--set executor=async`` runs the staleness-
+tolerant buffered executor — clients deliver after a device-dependent
+latency (``--set async_latency=2.0 --set async_jitter=0.5``) and the
+server merges every K-th arrival (``--async-buffer K``) with staleness-
+decayed weights (``--staleness-decay γ``, shape via ``--set
+staleness_schedule=polynomial``). ``--history-store int8`` carries the
+Δ history as the sharded quantized store (~25% of dense f32 at large P).
+Zero latency with K=1 (the defaults) is bit-for-bit the scan executor:
+
+    python -m repro run exp.json --set executor=async \
+        --async-buffer 4 --staleness-decay 0.8 --set async_latency=2.0
+    python -m repro sweep exp.json --set executor=async \
+        --grid staleness_decay=0.5,0.8,1.0
 """
 from __future__ import annotations
 
@@ -91,7 +105,10 @@ def _load_spec(path: str, sets: list[str],
                topology: str | None = None,
                edges: int | None = None,
                edge_period: int | None = None,
-               compress: str | None = None) -> ExperimentSpec:
+               compress: str | None = None,
+               async_buffer: int | None = None,
+               staleness_decay: float | None = None,
+               history_store: str | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
     if policy:
@@ -106,6 +123,12 @@ def _load_spec(path: str, sets: list[str],
         overrides["edge_period"] = edge_period
     if compress:
         overrides["compress"] = compress
+    if async_buffer is not None:
+        overrides["async_buffer"] = async_buffer
+    if staleness_decay is not None:
+        overrides["staleness_decay"] = staleness_decay
+    if history_store:
+        overrides["history_store"] = history_store
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -130,7 +153,10 @@ def cmd_run(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
                       device_profile=args.device_profile,
                       topology=args.topology, edges=args.edges,
-                      edge_period=args.edge_period, compress=args.compress)
+                      edge_period=args.edge_period, compress=args.compress,
+                      async_buffer=args.async_buffer,
+                      staleness_decay=args.staleness_decay,
+                      history_store=args.history_store)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -168,7 +194,10 @@ def cmd_sweep(args) -> int:
     spec = _load_spec(args.spec, args.set, policy=args.policy,
                       device_profile=args.device_profile,
                       topology=args.topology, edges=args.edges,
-                      edge_period=args.edge_period, compress=args.compress)
+                      edge_period=args.edge_period, compress=args.compress,
+                      async_buffer=args.async_buffer,
+                      staleness_decay=args.staleness_decay,
+                      history_store=args.history_store)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
@@ -199,6 +228,16 @@ def _add_policy_flags(p: argparse.ArgumentParser) -> None:
                    help="Δ-history wire/memory format (shorthand for "
                         "--set compress=...; int8 needs "
                         "--set use_fused=true)")
+    p.add_argument("--async-buffer", type=int, default=None,
+                   help="merge every K-th arrival (shorthand for --set "
+                        "async_buffer=...; needs --set executor=async)")
+    p.add_argument("--staleness-decay", type=float, default=None,
+                   help="γ of the staleness merge weight w(s) (shorthand "
+                        "for --set staleness_decay=...)")
+    p.add_argument("--history-store", default=None,
+                   choices=("dense", "int8"),
+                   help="async Δ-history carry layout (shorthand for "
+                        "--set history_store=...)")
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -4,9 +4,11 @@ A :class:`Session` owns one federated run: the materialized model/data/
 plan, the full round state, the metric history and the eval cadence. It
 wraps the executors of :mod:`repro.core.rounds` — per-round jit,
 ``lax.scan`` spans (``use_fused=True`` routes rounds through the Pallas
-kernel), or ``executor="sharded"`` spans that ``shard_map`` each round's
-sampled cohort over the client mesh — behind ``run(n_rounds)`` /
-``step()`` / ``eval()`` / ``save()`` / ``restore()``.
+kernel), ``executor="sharded"`` spans that ``shard_map`` each round's
+sampled cohort over the client mesh, or ``executor="async"`` spans that
+replay a precomputed arrival schedule through the staleness-tolerant
+buffered executor (:mod:`repro.core.async_rounds`) — behind
+``run(n_rounds)`` / ``step()`` / ``eval()`` / ``save()`` / ``restore()``.
 
 Determinism contract (pinned by ``tests/test_api.py``):
 
@@ -34,6 +36,7 @@ import numpy as np
 
 from repro.api.callbacks import Callback
 from repro.checkpoint.store import CheckpointManager
+from repro.core.async_rounds import AsyncConfig, make_async_span_runner
 from repro.core.budget import PrecompiledPolicy
 from repro.core.evaluation import evaluate
 from repro.core.rounds import (FedConfig, init_fed_state,
@@ -44,7 +47,7 @@ from repro.core.rounds import (FedConfig, init_fed_state,
 from repro.core.schedules import Plan, fednova_local_steps
 from repro.data.federated import CohortSampler, FederatedData
 from repro.models.simple import Classifier
-from repro.system.devices import make_profile
+from repro.system.devices import make_profile, simulate_arrivals
 from repro.utils.logging import MetricLogger
 from repro.utils.pytree import PyTree, tree_bytes
 
@@ -69,12 +72,19 @@ class Session:
                  use_fused: bool = False,
                  callbacks: Iterable[Callback] = (),
                  ckpt_dir: str | None = None, keep: int = 3,
-                 spec=None, policy=None, profile=None, topology=None):
-        if executor not in ("scan", "python", "sharded", "hierarchical"):
+                 spec=None, policy=None, profile=None, topology=None,
+                 async_cfg=None):
+        if executor not in ("scan", "python", "sharded", "hierarchical",
+                            "async"):
             raise ValueError(f"unknown executor {executor!r}")
-        if executor in ("sharded", "hierarchical") and use_fused:
+        if executor in ("sharded", "hierarchical", "async") and use_fused:
             raise ValueError(f"use_fused is not supported by the "
                              f"{executor} executor; pick one fast path")
+        if async_cfg is not None and executor != "async":
+            raise ValueError("async_cfg requires executor='async' (only "
+                             "the async executor runs the arrival process)")
+        if executor == "async" and async_cfg is None:
+            async_cfg = AsyncConfig()
         if (executor == "hierarchical") != (topology is not None):
             raise ValueError(
                 "the hierarchical executor needs an EdgeTopology (pass "
@@ -104,6 +114,7 @@ class Session:
         self.policy = policy
         self.profile = profile
         self.topology = topology
+        self.async_cfg = async_cfg
         self.x_test = x_test
         self.y_test = y_test
         self.eval_every = eval_every
@@ -118,11 +129,22 @@ class Session:
                                             policy=policy, profile=profile,
                                             topology=topology,
                                             compress=fed.compress,
+                                            async_cfg=async_cfg,
                                             needs_stale=fed.resolve()
                                             .needs_stale)
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
         self._cohort = None
+        self._sched = None
+        if executor == "async":
+            # the arrival process is precomputed host-side from the device
+            # profile (load dynamics never depend on training decisions),
+            # keyed by absolute round — a resumed session replays the same
+            # dispatch/delivery/merge events
+            self._sched = simulate_arrivals(
+                profile, np.asarray(plan.selection),
+                buffer_size=async_cfg.buffer_size,
+                latency=async_cfg.latency, jitter=async_cfg.jitter)
         if executor == "sharded":
             # absolute-round-keyed cohorts: resumed sessions sample the
             # same participants, mirroring the plan-mask contract
@@ -149,7 +171,7 @@ class Session:
                    executor=spec.executor, use_fused=spec.use_fused,
                    callbacks=callbacks, ckpt_dir=ckpt_dir, keep=keep,
                    spec=spec, policy=b.policy, profile=b.profile,
-                   topology=b.topology)
+                   topology=b.topology, async_cfg=b.async_cfg)
 
     @classmethod
     def restore_from(cls, ckpt_dir: str, *, step: int | None = None,
@@ -199,6 +221,10 @@ class Session:
                 self._span_runner = make_hierarchical_span_runner(
                     self.model, self.data, self.fed, self.topology,
                     policy=self.policy, profile=self.profile)
+            elif self.executor == "async":
+                self._span_runner = make_async_span_runner(
+                    self.model, self.data, self.fed, self.async_cfg,
+                    policy=self.policy, profile=self.profile)
             else:
                 self._span_runner = make_policy_span_runner(
                     self.model, self.data, self.fed, self.policy,
@@ -214,6 +240,9 @@ class Session:
         if self.executor == "sharded":
             self.state = run_span(self.state, self._sel[t:stop],
                                   self.k_active, self._cohort[t:stop])
+        elif self.executor == "async":
+            sched = tuple(jnp.asarray(x[t:stop]) for x in self._sched)
+            self.state = run_span(self.state, self.k_active, sched)
         else:
             self.state = run_span(self.state, self._sel[t:stop],
                                   self.k_active)
@@ -229,7 +258,7 @@ class Session:
         if t >= self.plan.rounds:
             raise RuntimeError(
                 f"plan exhausted: {t}/{self.plan.rounds} rounds done")
-        if self.executor in ("sharded", "hierarchical"):
+        if self.executor in ("sharded", "hierarchical", "async"):
             self._advance_span(t + 1)
         else:
             self.state = self._get_round_fn()(
@@ -260,12 +289,12 @@ class Session:
         if target <= self._t:               # nothing to do; never re-fires
             return self                     # hooks or re-records an eval
         per_round_cbs = any(cb.needs_python_loop for cb in self.callbacks)
-        # the sharded/hierarchical executors have no python-loop fallback
-        # (it would drop cohort sampling / the edge tier); per-round
-        # callbacks split their spans instead
+        # the sharded/hierarchical/async executors have no python-loop
+        # fallback (it would drop cohort sampling / the edge tier / the
+        # arrival buffer); per-round callbacks split their spans instead
         needs_python = (self.executor == "python"
                         or (per_round_cbs and self.executor
-                            not in ("sharded", "hierarchical")))
+                            not in ("sharded", "hierarchical", "async")))
         if needs_python:
             while self._t < target:
                 self.step()
@@ -327,6 +356,7 @@ class Session:
                               policy=self.policy, profile=self.profile,
                               topology=self.topology,
                               compress=self.fed.compress,
+                              async_cfg=self.async_cfg,
                               needs_stale=self.fed.resolve().needs_stale)
         state, extra = mgr.restore(like, step=step)
         self.state = state
@@ -365,7 +395,14 @@ class Session:
         flagged by ``upload_bytes_int8_measured``. Two-tier sessions
         additionally break uploads down per hop under ``"tiers"`` —
         client→edge bytes every decided round vs edge→server bytes only on
-        the ``edge_period``-boundary syncs."""
+        the ``edge_period``-boundary syncs.
+
+        Async sessions account uploads per REALIZED arrival: the ledger
+        books each dispatched update exactly once, at the round its
+        delivery lands on the server (a stale update in flight for s
+        rounds is still one upload), so ``upload_rounds`` = arrivals so
+        far — in-flight work is not yet an upload. The report then also
+        carries the raw ``arrivals``/``merges`` counters."""
         from repro.core.compress import (BYTES_PER_PARAM_F32,
                                          tier_upload_report)
         from repro.core.engine import cost_report_from_counts
@@ -394,7 +431,35 @@ class Session:
                 client_upload_bytes=rep["upload_bytes"],
                 n_syncs=self.topology.sync_count(self._t),
                 n_edges=self.topology.n_edges, model_bytes=model_bytes)
+        if "async" in self.state:
+            stats = self.state["async"]["stats"]
+            rep["arrivals"] = int(stats["arrivals"])
+            rep["merges"] = int(stats["merges"])
         return rep
+
+    def staleness_summary(self) -> dict:
+        """Arrival/staleness statistics of an async session's ledger-side
+        counters (carried in the round state, so they survive a resume):
+        realized arrivals and merges, mean/max staleness over all arrivals,
+        mean buffer occupancy at merge time, and the updates currently
+        buffered awaiting the next merge."""
+        if "async" not in self.state:
+            raise ValueError("staleness_summary() needs executor='async' "
+                             "(synchronous executors have no arrival "
+                             "process)")
+        a = self.state["async"]
+        s = a["stats"]
+        arrivals = int(s["arrivals"])
+        merges = int(s["merges"])
+        return {
+            "arrivals": arrivals,
+            "merges": merges,
+            "mean_staleness": float(s["stale_sum"]) / max(1, arrivals),
+            "max_staleness": int(s["stale_max"]),
+            "mean_buffer_occupancy":
+                int(s["occupancy_sum"]) / max(1, merges),
+            "pending_now": int(np.asarray(a["pending_mask"]).sum()),
+        }
 
     def ledger(self) -> dict:
         """Per-client energy/cost books accumulated in the round carry:

@@ -22,8 +22,10 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.async_rounds import (STALENESS_SCHEDULES, AsyncConfig)
 from repro.core.budget import POLICY_KINDS, BudgetPolicy, make_policy
 from repro.core.hierarchy import TOPOLOGY_KINDS, EdgeTopology
+from repro.core.history_store import STORE_KINDS
 from repro.core.rounds import FedConfig
 from repro.core.schedules import Plan, make_plan
 from repro.data.federated import FederatedData, build_federated
@@ -37,8 +39,10 @@ from repro.system.devices import (DeviceProfile, edge_scaled_profile,
 #: schema version embedded in serialized specs; bump on breaking changes
 #: (v2: runtime budget policies + device-profile fields; v3: two-tier
 #: edge topologies — topology/n_edges/edge_period/edge_speed/edge_harvest;
-#: v4: int8 Δ-history compression — compress)
-SPEC_VERSION = 4
+#: v4: int8 Δ-history compression — compress; v5: async executor —
+#: async_buffer/staleness_decay/staleness_schedule/async_latency/
+#: async_jitter/history_store)
+SPEC_VERSION = 5
 
 _COMPRESS = ("none", "int8")
 
@@ -47,7 +51,7 @@ _PARTITIONS = ("gamma", "classes")
 _BUDGETS = ("power", "two_group", "uniform", "explicit")
 _MODELS = ("mlp", "cnn", "resnet18")
 _SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
-_EXECUTORS = ("scan", "python", "sharded", "hierarchical")
+_EXECUTORS = ("scan", "python", "sharded", "hierarchical", "async")
 _DEVICE_PROFILES = ("budget", "uniform")
 _TOPOLOGIES = ("flat",) + TOPOLOGY_KINDS
 
@@ -65,6 +69,7 @@ class Bundle:
     policy: BudgetPolicy
     profile: DeviceProfile
     topology: EdgeTopology | None = None
+    async_cfg: AsyncConfig | None = None
 
 
 @dataclass(frozen=True)
@@ -136,9 +141,19 @@ class ExperimentSpec:
     edge_speed: tuple[float, ...] | None = None
     edge_harvest: tuple[float, ...] | None = None
 
+    # ---- async executor (executor="async", core/async_rounds.py) --------
+    async_buffer: int = 1            # merge every K-th arrival (FedBuff K)
+    staleness_decay: float = 0.9     # γ of the merge weight w(s)
+    staleness_schedule: str = "geometric"  # geometric | polynomial
+    async_latency: float = 0.0       # nominal rounds-in-flight per update
+    async_jitter: float = 0.0        # uniform latency noise amplitude
+    #: Δ-history carry layout (core/history_store.py): "dense" f32 |
+    #: "int8" sharded quantized store (N = 10⁵-scale estimation replay)
+    history_store: str = "dense"
+
     # ---- execution ------------------------------------------------------
     eval_every: int = 20
-    executor: str = "scan"         # scan | python | sharded | hierarchical
+    executor: str = "scan"  # scan | python | sharded | hierarchical | async
     use_fused: bool = False
     #: Δ-history wire/storage format: "none" (f32) | "int8" (quantized
     #: payload + per-row scales; requires use_fused)
@@ -231,6 +246,31 @@ class ExperimentSpec:
                     raise ValueError(f"{name} factors must be > 0")
                 object.__setattr__(self, name,
                                    tuple(float(s) for s in v))
+        if self.executor == "async":
+            if self.use_fused:
+                raise ValueError("use_fused is not supported by the async "
+                                 "executor; pick one fast path")
+            self.async_config()     # validates the async_* fields eagerly
+            if self.async_buffer > self.n_clients:
+                raise ValueError(
+                    f"async_buffer must be <= n_clients="
+                    f"{self.n_clients} (each client parks at most one "
+                    f"update in the merge buffer), got {self.async_buffer}")
+        else:
+            _check("staleness_schedule", self.staleness_schedule,
+                   STALENESS_SCHEDULES)
+            _check("history_store", self.history_store, STORE_KINDS)
+            defaults = dict(async_buffer=1, staleness_decay=0.9,
+                            staleness_schedule="geometric",
+                            async_latency=0.0, async_jitter=0.0,
+                            history_store="dense")
+            off = [k for k, v in defaults.items()
+                   if getattr(self, k) != v]
+            if off:
+                raise ValueError(
+                    f"{off} require executor='async' (only the async "
+                    "executor runs the arrival process and staleness-"
+                    "decayed merges)")
         self.fed_config()               # validates strategy name eagerly
 
     # ---- serialization --------------------------------------------------
@@ -339,7 +379,21 @@ class ExperimentSpec:
         return Bundle(model=model, data=data, fed=self.fed_config(),
                       plan=plan, x_test=jnp.asarray(test.x),
                       y_test=jnp.asarray(test.y), p=p, policy=policy,
-                      profile=profile, topology=topology)
+                      profile=profile, topology=topology,
+                      async_cfg=self.async_config())
+
+    def async_config(self) -> AsyncConfig | None:
+        """The spec's async-executor config (validates the ``async_*``
+        fields — buffer K ≥ 1, decay ∈ (0, 1], latency/jitter ≥ 0); None
+        for synchronous executors."""
+        if self.executor != "async":
+            return None
+        return AsyncConfig(buffer_size=self.async_buffer,
+                           staleness_decay=self.staleness_decay,
+                           schedule=self.staleness_schedule,
+                           latency=self.async_latency,
+                           jitter=self.async_jitter,
+                           history_store=self.history_store)
 
     def edge_topology(self) -> EdgeTopology | None:
         """The spec's two-tier topology (deterministic in its fields, so a

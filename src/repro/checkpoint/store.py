@@ -41,6 +41,19 @@ POLICY_STATE_KEYS = ("policy", "device", "ledger")
 #: global params would silently rewind the current period.
 HIER_STATE_KEYS = ("edge_params",)
 
+#: async-executor carry key (the FedBuff machinery of
+#: ``repro.core.async_rounds.init_async_carry``: in-flight pulled models,
+#: pull-round/staleness counters, the pending delta buffer + masks, and
+#: arrival/merge statistics). Saved whenever present so a mid-run resume
+#: is bit-identical: a client whose update is still in flight — or
+#: buffered awaiting the K-th arrival — lives ONLY here.
+ASYNC_STATE_KEYS = ("async",)
+
+#: subtrees an ``async`` carry must hold to be resumable
+_ASYNC_SUBKEYS = ("inflight", "inflight_train", "pull_round", "pending",
+                  "pending_mask", "pending_train", "pending_stale",
+                  "pending_k", "stats")
+
 
 def _is_typed_key(leaf) -> bool:
     try:
@@ -183,6 +196,13 @@ def save_fed_state(path: str, state: PyTree,
                 f"policy-mode state is missing {missing}; a resumable "
                 f"checkpoint needs all of {list(POLICY_STATE_KEYS)} once "
                 "any is present")
+    if "async" in state:
+        missing = [k for k in _ASYNC_SUBKEYS if k not in state["async"]]
+        if missing:
+            raise ValueError(
+                f"async carry is missing {missing}; a resumable async "
+                f"checkpoint needs all of {list(_ASYNC_SUBKEYS)} — an "
+                "in-flight or buffered update lives only there")
     save_pytree(path, state, extra=extra)
 
 

@@ -1,0 +1,152 @@
+"""Sharded, optionally int8-quantized per-client Δ-history store.
+
+Every synchronous executor carries the full (N, P) f32 Δ history in the
+round state — 4·N·P bytes, the term that caps the simulated federation
+size long before compute does. This module factors that carry into a
+:class:`HistoryStore` with two interchangeable layouts:
+
+* ``kind="dense"`` — the plain f32 matrix (the seed-era carry, exact);
+* ``kind="int8"`` — per-row symmetric int8 payload + one f32 scale per
+  client (the layout of :mod:`repro.kernels.cc_delta_update_q8`,
+  produced/consumed via :func:`repro.core.compress.quantize_rows`):
+  ``N·P + 4·N`` bytes, ≈ 25% of dense f32 at P ≫ 1 — N = 10⁵ clients at
+  P = 1024 is ~102 MB instead of ~410 MB.
+
+Rows shard over the ``("clients",)`` mesh axis (:meth:`HistoryStore.
+shard`) and are gathered/dequantized only for the active cohort
+(:meth:`read` / the fused ops :func:`repro.kernels.ops.q8_gather_rows` /
+``q8_scatter_rows``), so CC-FedAvg estimation replay never materializes
+O(N·P) f32. The async executor (:mod:`repro.core.async_rounds`) carries
+its Δ history through this store; ``benchmarks/async_throughput.py``
+measures both layouts up to N = 10⁵.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import quantize_rows
+
+#: supported store layouts
+STORE_KINDS = ("dense", "int8")
+
+#: row width padded to a tile-friendly multiple (matches the fused
+#: executors' ``_FUSED_PAD`` so int8 carries are layout-compatible)
+TILE = 512
+
+
+def padded_width(p: int, tile: int = TILE) -> int:
+    """Flat parameter count rounded up to the store's tile multiple."""
+    return p + (-p) % tile
+
+
+@dataclass(frozen=True)
+class HistoryStore:
+    """One federation's Δ-history rows: layout, init, gather/scatter."""
+
+    n_clients: int
+    width: int                 # padded flat parameter count P
+    kind: str = "dense"
+
+    def __post_init__(self):
+        if self.kind not in STORE_KINDS:
+            raise ValueError(f"history store kind must be one of "
+                             f"{STORE_KINDS}, got {self.kind!r}")
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if self.width < 1:
+            raise ValueError(f"width must be >= 1, got {self.width}")
+
+    # ---- carry lifecycle ------------------------------------------------
+
+    def init(self) -> dict:
+        """Zero history in this store's carry layout. The int8 carry is
+        exactly ``quantize_rows(zeros)`` — payload 0, clamp-floor scales —
+        so a fresh store round-trips a checkpoint bit-wise."""
+        if self.kind == "dense":
+            return {"rows": jnp.zeros((self.n_clients, self.width),
+                                      jnp.float32)}
+        payload, scales = quantize_rows(
+            jnp.zeros((self.n_clients, self.width)))
+        return {"payload": payload, "scales": scales}
+
+    def like(self, carry: dict) -> None:
+        """Validate that ``carry`` matches this store's layout."""
+        want = {"rows"} if self.kind == "dense" else {"payload", "scales"}
+        if set(carry) != want:
+            raise ValueError(f"{self.kind} store carry needs keys {want}, "
+                             f"got {sorted(carry)}")
+
+    # ---- row access -----------------------------------------------------
+
+    def read(self, carry: dict, idx=None) -> jnp.ndarray:
+        """f32 rows — the full matrix, or only the cohort ``idx`` (the
+        int8 path gathers quantized rows first, so the f32 intermediate is
+        (M, P), never (N, P))."""
+        if self.kind == "dense":
+            rows = carry["rows"]
+            return rows if idx is None else jnp.take(rows, idx, axis=0)
+        if idx is None:
+            from repro.core.compress import dequantize_rows
+            return dequantize_rows(carry["payload"], carry["scales"])
+        from repro.kernels.ops import q8_gather_rows
+        return q8_gather_rows(carry["payload"], carry["scales"], idx)
+
+    def write(self, carry: dict, mask, rows: jnp.ndarray) -> dict:
+        """Masked full-N write: rows where ``mask`` take the new values
+        (requantized under int8); unmasked rows keep their stored bits
+        verbatim — unchanged clients never drift through a round trip."""
+        if self.kind == "dense":
+            return {"rows": jnp.where(mask[:, None], rows, carry["rows"])}
+        q_payload, q_scales = quantize_rows(rows)
+        return {"payload": jnp.where(mask[:, None], q_payload,
+                                     carry["payload"]),
+                "scales": jnp.where(mask, q_scales, carry["scales"])}
+
+    def scatter(self, carry: dict, idx, rows: jnp.ndarray) -> dict:
+        """Cohort write: the (M, P) updated rows land at ``idx``."""
+        if self.kind == "dense":
+            return {"rows": carry["rows"].at[idx].set(rows)}
+        from repro.kernels.ops import q8_scatter_rows
+        payload, scales = q8_scatter_rows(carry["payload"], carry["scales"],
+                                          idx, rows)
+        return {"payload": payload, "scales": scales}
+
+    # ---- memory accounting + placement ----------------------------------
+
+    def nbytes(self) -> int:
+        """Bytes the carry holds (the history-store memory math of the
+        README: dense 4·N·P vs int8 N·P + 4·N)."""
+        if self.kind == "dense":
+            return 4 * self.n_clients * self.width
+        return self.n_clients * self.width + 4 * self.n_clients
+
+    @staticmethod
+    def carry_bytes(carry: dict) -> int:
+        """Live bytes of a materialized carry (any layout)."""
+        return int(sum(np.prod(v.shape) * v.dtype.itemsize
+                       for v in carry.values()))
+
+    def shard(self, carry: dict, mesh=None) -> dict:
+        """Place the carry with rows split over the ``("clients",)`` mesh
+        axis (scales replicated-free too — every leaf's leading dim is N).
+        Defaults to the largest device count dividing N."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.rounds import CLIENT_AXIS
+        from repro.launch.mesh import best_client_shards, make_client_mesh
+
+        if mesh is None:
+            mesh = make_client_mesh(best_client_shards(self.n_clients))
+        if CLIENT_AXIS not in mesh.axis_names:
+            raise ValueError(f"mesh must carry a {CLIENT_AXIS!r} axis, got "
+                             f"{mesh.axis_names}")
+        shards = dict(zip(mesh.axis_names, mesh.devices.shape))[CLIENT_AXIS]
+        if self.n_clients % shards:
+            raise ValueError(
+                f"{self.n_clients} client rows must divide evenly over the "
+                f"{shards}-way {CLIENT_AXIS!r} mesh axis")
+        sh = NamedSharding(mesh, PartitionSpec(CLIENT_AXIS))
+        return {k: jax.device_put(v, sh) for k, v in carry.items()}

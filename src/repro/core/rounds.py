@@ -1,6 +1,6 @@
 """Round executors for the vectorized-client federation.
 
-Five ways to run the same round semantics, all built from one traceable
+Six ways to run the same round semantics, all built from one traceable
 cohort-round core (:func:`_cohort_round` and the shared training/masking
 helpers) so they are numerically interchangeable:
 
@@ -41,7 +41,15 @@ Two decision modes feed every executor:
   the ``("edges",)`` mesh axis (:func:`repro.launch.mesh.make_edge_mesh`):
   intra-edge rounds are entirely shard-local, only the sync rounds
   all-gather the uploads. A single edge, or ``edge_period=1``, collapses
-  to flat FedAvg bit-for-bit, so the flat executors are its oracle.
+  to flat FedAvg bit-for-bit, so the flat executors are its oracle;
+* :mod:`repro.core.async_rounds` — the staleness-tolerant buffered-async
+  executor: clients pull/deliver on a precomputed arrival schedule
+  (:func:`repro.system.devices.simulate_arrivals`), updates merge every
+  K arrivals with staleness-decayed weights through
+  ``Strategy.merge_stale``, and the Δ history can ride the sharded int8
+  :class:`repro.core.history_store.HistoryStore`. Zero latency + K = 1
+  collapses to the scan executor bit-for-bit, so it too is
+  differential-testable against the flat oracle.
 
 Strategy semantics themselves live in :mod:`repro.core.strategies`; this
 module never branches on a strategy name.
@@ -143,7 +151,7 @@ def _local_train(model: Classifier, params, key, cx, cy, size,
 
 def init_fed_state(rng, model: Classifier, n_clients: int, *,
                    policy=None, profile=None, topology=None,
-                   compress: str = "none",
+                   compress: str = "none", async_cfg=None,
                    needs_stale: bool = True) -> PyTree:
     """Fresh federated state. With ``policy`` + ``profile`` the carry also
     holds the budget-policy rows, the simulated device state and the
@@ -157,7 +165,13 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
     as a flat tile-padded int8 payload + per-row f32 scales instead of the
     f32 client tree; with ``needs_stale=False`` (every strategy whose
     estimate never reads the stale model) the O(N, P) f32 ``prev_local``
-    is dropped from the carry entirely."""
+    is dropped from the carry entirely.
+
+    ``async_cfg`` (an :class:`repro.core.async_rounds.AsyncConfig`) adds
+    the async executor's FedBuff carry under ``state["async"]`` and, with
+    ``history_store="int8"``, swaps the Δ history for the quantized
+    :class:`repro.core.history_store.HistoryStore` carry (the async
+    analogue of ``compress="int8"``, same prev_local-dropping rule)."""
     params = model.init(rng)
     zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
     state = {
@@ -196,6 +210,10 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
                 f"{n_clients}")
         state["edge_params"] = tree_broadcast_clients(params,
                                                       topology.n_edges)
+    if async_cfg is not None:
+        from repro.core.async_rounds import init_async_carry
+        state = init_async_carry(state, params, n_clients, async_cfg,
+                                 needs_stale=needs_stale)
     return state
 
 

@@ -139,6 +139,23 @@ class Strategy:
         across shards when the client axis is shard_map'ed)."""
         return tree_masked_mean(delta_i, aggf, axis_name=ctx.axis_name)
 
+    def merge_stale(self, delta_i: PyTree, aggf: jax.Array,
+                    staleness: jax.Array, decay_w: jax.Array,
+                    ctx: RoundCtx) -> PyTree:
+        """FedBuff-style staleness-decayed merge of a buffered cohort
+        (the async executor's aggregation hook).
+
+        ``staleness`` is the per-client rounds-since-pull counter of each
+        buffered arrival and ``decay_w`` the schedule's weights ``w(s)``
+        (``γ^s`` by default — see
+        :func:`repro.core.async_rounds.staleness_weights`). The default
+        folds the decay into the aggregation weights, so at ``s = 0`` the
+        weights are exactly 1.0 and ``merge_stale ≡ aggregate``
+        bit-for-bit — the collapse-to-synchronous guarantee the executor
+        matrix pins. Strategies with richer staleness handling (e.g.
+        staleness-dependent estimates) may override."""
+        return self.aggregate(delta_i, aggf * decay_w, ctx)
+
     def fused_epilogue(self, ctx: RoundCtx) -> FusedEpilogue:
         """Coefficients the fused kernels run this strategy with. The base
         implementation is the FedAvg family (train-only aggregation, zero

@@ -80,6 +80,34 @@ def cc_epilogue_update(locals_, deltas, globals_, train, upd, agg_w,
         interpret=interpret)
 
 
+@jax.jit
+def q8_gather_rows(payload, scales, idx):
+    """Gather + dequantize cohort rows of an int8 (N, P) history store.
+
+    The sharded history store (:mod:`repro.core.history_store`) keeps the
+    full federation's Δ rows quantized and materializes f32 only for the
+    active cohort — this is its gather primitive, one fused XLA program
+    (take → widen → scale) so the f32 intermediate never exceeds (M, P).
+    """
+    from repro.core.compress import dequantize_rows
+    return dequantize_rows(jnp.take(payload, idx, axis=0),
+                           jnp.take(scales, idx, axis=0))
+
+
+@jax.jit
+def q8_scatter_rows(payload, scales, idx, rows):
+    """Quantize + scatter updated cohort rows back into the int8 store.
+
+    Per-row symmetric quantization (:func:`repro.core.compress.
+    quantize_rows` semantics) of the (M, P) f32 rows, written at ``idx``;
+    rows outside the cohort keep their payload/scale bits verbatim, which
+    is what makes a checkpoint resume of the store bit-identical.
+    """
+    from repro.core.compress import quantize_rows
+    q_payload, q_scales = quantize_rows(rows)
+    return payload.at[idx].set(q_payload), scales.at[idx].set(q_scales)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def cc_delta_update_q8(locals_, payload, scales, globals_, train, upd,
                        agg_w, e_replay, e_stale, store_scale, denom,

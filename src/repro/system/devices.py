@@ -32,6 +32,7 @@ Dynamics (one round):
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +41,11 @@ import numpy as np
 #: background load never reaches 1.0 — a fully-loaded device would imply an
 #: infinite round time in the deadline policy's estimate
 _LOAD_MAX = 0.95
+
+#: offset mixed into the stateless-noise seed for arrival-latency jitter so
+#: latency draws never collide with the load / budget-policy noise streams
+#: (which key on the bare profile seed)
+_LATENCY_SALT = 9176
 
 #: per-client array fields of a profile, in ``rows()`` order
 PROFILE_ROW_KEYS = ("budget", "flops_rate", "train_cost", "harvest",
@@ -220,6 +226,109 @@ def advance_devices(rows: dict, dev: dict, trained: jax.Array, rnd,
         + rows["harvest"],
         0.0, rows["capacity"])
     return {"energy": energy, "load": load}
+
+
+# ---------------------------------------------------------------------------
+# arrival-process simulator (asynchronous executor)
+# ---------------------------------------------------------------------------
+
+
+class ArrivalSchedule(NamedTuple):
+    """Host-precomputed event tables the async executor scans over.
+
+    All tables are numpy; the Session slices them per span and ships them
+    as scan inputs, exactly like the plan masks of the synchronous
+    executors.
+    """
+
+    dispatch: np.ndarray   # (T, N) bool — client pulls the global model
+    deliver: np.ndarray    # (T, N) bool — client's update arrives
+    merge: np.ndarray      # (T,) bool — the K-arrival buffer flushes
+
+
+def simulate_arrivals(profile: DeviceProfile, selection, *,
+                      buffer_size: int = 1, latency: float = 0.0,
+                      jitter: float = 0.0) -> ArrivalSchedule:
+    """Simulate the asynchronous arrival process over a plan's selection.
+
+    Each selected, idle client *dispatches* (pulls the current global
+    model and starts local work); its update *delivers* ``L`` rounds
+    later, where ``L = rint(latency / (flops_rate · (1 − load)) +
+    jitter · u)`` clipped at 0 — slow or heavily-loaded devices deliver
+    stale updates. The server buffers arrivals and *merges* whenever at
+    least ``buffer_size`` (K) are pending, FedBuff-style. A client keeps
+    at most one update in flight and re-dispatches only after its
+    previous one has been merged.
+
+    The background-load trajectory replays :func:`advance_devices`
+    exactly (load dynamics never depend on training decisions), and the
+    latency jitter draws come from :func:`stateless_uniform` under a
+    salted seed — the whole schedule is a pure function of (profile,
+    selection), so a resumed session recomputes the identical tables.
+
+    With ``latency == 0`` and ``jitter == 0`` every update delivers in
+    its dispatch round; at ``buffer_size = 1`` the merge then fires every
+    round with arrivals and staleness is identically zero — the
+    collapse-to-synchronous configuration the executor matrix pins.
+    """
+    if not isinstance(buffer_size, int) or buffer_size < 1:
+        raise ValueError(
+            f"async buffer size K must be an int >= 1, got {buffer_size!r}")
+    if latency < 0:
+        raise ValueError(f"latency must be >= 0, got {latency}")
+    if jitter < 0:
+        raise ValueError(f"latency jitter must be >= 0, got {jitter}")
+    sel = np.asarray(selection, bool)
+    if sel.ndim != 2:
+        raise ValueError(
+            f"selection must be a (T, N) bool table, got shape {sel.shape}")
+    t_rounds, n = sel.shape
+    if n != profile.n_clients:
+        raise ValueError(f"selection covers {n} clients, profile has "
+                         f"{profile.n_clients}")
+    if buffer_size > n:
+        # each client parks at most one update in the buffer, so a K
+        # beyond the federation size can never fill and would deadlock
+        raise ValueError(
+            f"async buffer size K must be <= n_clients={n} (one pending "
+            f"update per client), got {buffer_size}")
+    rate = np.asarray(profile.flops_rate, np.float64)
+    rho = np.asarray(profile.load_rho, np.float64)
+    mean = np.asarray(profile.load_mean, np.float64)
+    load_jit = np.asarray(profile.load_jitter, np.float64)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    load = mean.copy()                     # round-0 load (init_device_state)
+    zero_lag = latency == 0.0 and jitter == 0.0
+    dispatch = np.zeros((t_rounds, n), bool)
+    deliver = np.zeros((t_rounds, n), bool)
+    merge = np.zeros((t_rounds,), bool)
+    due = np.full((n,), -1, np.int64)      # delivery round of in-flight work
+    pending = np.zeros((n,), bool)         # delivered, awaiting the merge
+    for t in range(t_rounds):
+        d = sel[t] & (due < 0) & ~pending
+        dispatch[t] = d
+        if zero_lag:
+            lag = np.zeros((n,), np.int64)
+        else:
+            u = np.asarray(stateless_uniform(
+                profile.seed + _LATENCY_SALT, t, ids))
+            lag = np.maximum(np.rint(
+                latency / np.maximum(rate * (1.0 - load), 1e-6)
+                + jitter * u).astype(np.int64), 0)
+        due = np.where(d, t + lag, due)
+        arriving = due == t
+        deliver[t] = arriving
+        pending |= arriving
+        due[arriving] = -1
+        if pending.sum() >= buffer_size:
+            merge[t] = True
+            pending[:] = False
+        if not zero_lag and load_jit.any():
+            u_load = np.asarray(stateless_uniform(
+                profile.seed, t, ids, minval=-1.0, maxval=1.0))
+            load = np.clip(rho * load + (1.0 - rho) * mean
+                           + load_jit * u_load, 0.0, _LOAD_MAX)
+    return ArrivalSchedule(dispatch=dispatch, deliver=deliver, merge=merge)
 
 
 # ---------------------------------------------------------------------------

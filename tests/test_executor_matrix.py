@@ -1,11 +1,13 @@
 """Cross-executor differential matrix.
 
-Six numerically-interchangeable executor cells now run the same round
+Eight numerically-interchangeable executor cells now run the same round
 semantics — {python, scan, fused, sharded} plus the two collapse
 configurations of the hierarchical two-tier executor (single edge /
-per-round sync) — so equivalence is pinned systematically: every executor
-× every registered strategy × every algorithm variant must reproduce the
-python-loop oracle's final params and metric stream to ≤1e-5. The oracle
+per-round sync) plus the async executor at its collapse point (zero
+latency, merge every arrival) — so equivalence is pinned systematically:
+every executor × every registered strategy × every algorithm variant
+must reproduce the python-loop oracle's final params and metric stream
+to ≤1e-5. The oracle
 runs once per strategy and is shared across cells (the variant axis
 provably never enters round numerics — it drives the Appendix-A cost
 accounting, which every cell smoke-checks instead).
@@ -22,6 +24,14 @@ cc/fedavg/fednova, and a multi-edge multi-period run is bit-identical on
 a 1-shard and a multi-shard edge mesh — intra-edge aggregation reads each
 edge's own block only, and sync rounds all-gather before reducing.
 
+The async executor's acceptance pin mirrors it: zero latency/jitter with
+``buffer_size=1`` makes every update deliver in its dispatch round with
+staleness 0 and ``w(0) = 1.0`` exactly, so the async run reproduces the
+scan executor BIT-FOR-BIT — params, full history and metric stream — for
+cc/fedavg/fednova. Its PrecompiledPolicy pin runs a NON-collapse config
+(buffered merges, real latency) so the decide-at-dispatch path is
+exercised where staleness is nonzero.
+
 This file must pass both on the default 1-device CPU and under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
 executor-matrix and hierarchy-matrix jobs), where ``shard_map`` really
@@ -33,6 +43,7 @@ import numpy as np
 import pytest
 
 from repro.api import ExperimentSpec, Session
+from repro.core.async_rounds import AsyncConfig, make_async_span_runner
 from repro.core.budget import EnergyAware, PrecompiledPolicy
 from repro.core.hierarchy import EdgeTopology
 from repro.core.rounds import (FedConfig, init_fed_state,
@@ -41,7 +52,7 @@ from repro.core.rounds import (FedConfig, init_fed_state,
                                make_policy_span_runner, make_round_fn,
                                make_sharded_span_runner, make_span_runner)
 from repro.core.schedules import make_plan
-from repro.system.devices import make_profile
+from repro.system.devices import make_profile, simulate_arrivals
 from repro.core.strategies import available_strategies, get_strategy
 from repro.data.federated import CohortSampler, build_federated
 from repro.data.partition import budget_law, partition_gamma
@@ -52,7 +63,7 @@ from repro.models.simple import make_classifier
 
 N = 4
 EXECUTORS = ("python", "scan", "fused", "fused_q8", "sharded",
-             "hier_single_edge", "hier_sync_every_round")
+             "hier_single_edge", "hier_sync_every_round", "async")
 VARIANTS = ("client", "server", "mixed")
 ATOL = 1e-5
 #: the quantized fused cells carry int8 Δ history — vs the exact f32
@@ -206,6 +217,20 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
         s_pol = make_hierarchical_span_runner(
             model, fd, fed, topo, policy=policy, profile=profile)(
             fresh(policy=policy, profile=profile, topology=topo), sel, k)
+    elif executor == "async":
+        # a NON-collapse config: buffered merges + device-dependent
+        # latency, so the pin covers nonzero staleness, not just the
+        # degenerate sync-equivalent point
+        cfg = AsyncConfig(buffer_size=2, latency=1.0, jitter=0.5)
+        sched = tuple(jnp.asarray(x) for x in simulate_arrivals(
+            profile, np.asarray(plan.selection),
+            buffer_size=cfg.buffer_size, latency=cfg.latency,
+            jitter=cfg.jitter))
+        s_mask = make_async_span_runner(model, fd, fed, cfg)(
+            fresh(async_cfg=cfg), train, k, sched)
+        s_pol = make_async_span_runner(
+            model, fd, fed, cfg, policy=policy, profile=profile)(
+            fresh(policy=policy, profile=profile, async_cfg=cfg), k, sched)
     else:                                        # sharded
         idx = jnp.asarray(CohortSampler(N, 2, seed=3).indices(rounds))
         s_mask = make_sharded_span_runner(model, fd, fed, cohort_size=2)(
@@ -216,7 +241,8 @@ def test_precompiled_policy_bit_for_bit(policy_setup, kind, executor):
                              sel, k, idx)
 
     # the q8 replay carry drops prev_local — compare the keys present
-    for key in ("params", "deltas", "prev_local", "trained_ever"):
+    # (the async cell also pins its buffer/staleness carry)
+    for key in ("params", "deltas", "prev_local", "trained_ever", "async"):
         if key not in s_mask:
             assert key not in s_pol, f"{key} only in policy-mode state"
             continue
@@ -399,6 +425,39 @@ def test_hierarchy_collapse_is_bit_for_bit_flat(strategy, collapse):
                         jax.tree.leaves(flat_sess.state[key])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=f"{collapse}/{key}")
+
+
+@pytest.mark.parametrize("strategy", ["cc", "fedavg", "fednova"])
+def test_async_collapse_is_bit_for_bit_scan(strategy):
+    """The acceptance pin of the async executor: zero latency/jitter with
+    ``buffer_size=1`` (the spec defaults) delivers every update in its
+    dispatch round with staleness exactly 0, so the buffered-async run
+    reproduces the synchronous scan executor EXACTLY — params, full Δ
+    history, stale-model cache, trained_ever and metric stream."""
+    flat_params, flat_accs, flat_sess = _run(strategy, "scan")
+    async_params, async_accs, async_sess = _run(strategy, "async")
+    assert async_accs == flat_accs
+    for a, b in zip(jax.tree.leaves(async_params),
+                    jax.tree.leaves(flat_params)):
+        np.testing.assert_array_equal(a, b, err_msg=f"async/{strategy}")
+    for key in ("deltas", "prev_local", "trained_ever"):
+        for a, b in zip(jax.tree.leaves(async_sess.state[key]),
+                        jax.tree.leaves(flat_sess.state[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"async/{key}")
+    summ = async_sess.staleness_summary()
+    assert summ["max_staleness"] == 0 and summ["mean_staleness"] == 0.0
+
+
+def test_async_session_rejects_fused():
+    ds = make_dataset("gaussian", n=64, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, N, gamma=0.5, seed=0))
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    with pytest.raises(ValueError, match="use_fused"):
+        Session(model, fd, FedConfig(strategy="cc"),
+                make_plan("full", np.ones(N), 2), executor="async",
+                use_fused=True)
 
 
 @pytest.mark.parametrize("strategy", ["cc", "s2", "fednova"])

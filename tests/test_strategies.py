@@ -230,6 +230,59 @@ def test_aggregation_weights_sum_to_one(name, sel, train, c):
         np.testing.assert_allclose(np.asarray(leaf), expect, atol=1e-5)
 
 
+@settings(max_examples=25)
+@given(name=st.sampled_from(available_strategies()),
+       sel=st.lists(st.booleans(), min_size=N, max_size=N),
+       train=st.lists(st.booleans(), min_size=N, max_size=N),
+       stale=st.lists(st.integers(min_value=0, max_value=6),
+                      min_size=N, max_size=N),
+       decay=st.floats(min_value=0.3, max_value=1.0),
+       c=st.floats(min_value=-3.0, max_value=3.0))
+def test_merge_stale_weights_stay_convex(name, sel, train, stale, decay, c):
+    """The async merge invariant: under ANY buffer mask and ANY staleness
+    vector the staleness-decayed weights stay a convex combination —
+    merging identical per-client deltas returns that delta unchanged, and
+    an empty buffer merges to exactly zero (a no-op update)."""
+    from repro.core.async_rounds import staleness_weights
+    strategy = get_strategy(name)
+    ctx = _ctx(sel, train, [3] * N)
+    aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+    s = jnp.asarray(stale, jnp.int32)
+    w = staleness_weights("geometric", decay, s)
+    const = jax.tree.map(lambda x: jnp.full_like(x, c), _tree(N))
+    out = strategy.merge_stale(const, aggf, s, w, ctx)
+    expect = c if bool((aggf * w).sum() > 0) else 0.0
+    for leaf in jax.tree.leaves(out):
+        np.testing.assert_allclose(np.asarray(leaf), expect, atol=1e-5)
+
+
+@pytest.mark.parametrize("schedule", ["geometric", "polynomial"])
+@settings(max_examples=25)
+@given(name=st.sampled_from(available_strategies()),
+       sel=st.lists(st.booleans(), min_size=N, max_size=N),
+       train=st.lists(st.booleans(), min_size=N, max_size=N),
+       decay=st.floats(min_value=0.1, max_value=1.0))
+def test_merge_stale_at_zero_staleness_equals_aggregate(schedule, name,
+                                                        sel, train, decay):
+    """At staleness 0 every schedule's weight is EXACTLY 1.0, so
+    ``merge_stale`` must reproduce ``aggregate`` bit-for-bit for every
+    registered strategy — the hook-level statement of the async
+    executor's collapse-to-synchronous guarantee."""
+    from repro.core.async_rounds import staleness_weights
+    strategy = get_strategy(name)
+    ctx = _ctx(sel, train, [3] * N)
+    aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+    zero = jnp.zeros((N,), jnp.int32)
+    w = staleness_weights(schedule, decay, zero)
+    np.testing.assert_array_equal(np.asarray(w), 1.0)
+    delta = _tree(N, seed=2)
+    merged = strategy.merge_stale(delta, aggf, zero, w, ctx)
+    plain = strategy.aggregate(delta, aggf, ctx)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(plain)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{name}/{schedule}")
+
+
 _ALL_TRAIN_PARAMS: dict = {}
 
 
