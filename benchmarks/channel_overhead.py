@@ -1,0 +1,136 @@
+"""Uplink-channel overhead: noiseless vs exact, aircomp vs noiseless.
+
+Three cells over the same scan span:
+
+* **exact** — the pre-channel engine (``channel='noiseless'`` makes
+  ``uplink_channel()`` return None, so the executors never even touch
+  the channel code path);
+* **noiseless** — identical config run again: measures that the channel
+  *refactor itself* costs nothing (the acceptance gate: ≤1.2x exact);
+* **aircomp** — AWGN at 20 dB + Rayleigh fading: the real cost of two
+  extra PRNG draws + a fused multiply-add per round.
+
+Emits machine-readable results to ``BENCH_channel.json`` (``--json`` to
+change the path, empty string to disable). CI smoke-runs it with
+``--max-overhead 1.2`` as the noiseless-vs-exact regression budget.
+
+    PYTHONPATH=src python benchmarks/channel_overhead.py [--clients 64]
+        [--rounds 30] [--reps 3] [--snr-db 20] [--max-overhead 1.2]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounds import FedConfig, init_fed_state, make_span_runner
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.simple import make_classifier
+
+
+def _block(x):
+    jax.block_until_ready(jax.tree.leaves(x)[0])
+
+
+def _bench_cell(args, fed, model, fd, plan):
+    n = args.clients
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    sel = jnp.asarray(plan.selection)
+    train = jnp.asarray(plan.training)
+    runner = make_span_runner(model, fd, fed)
+    _block(runner(init_fed_state(jax.random.PRNGKey(0), model, n),
+                  sel, train, k))
+    times = []
+    for _ in range(args.reps):
+        state = init_fed_state(jax.random.PRNGKey(0), model, n)
+        t0 = time.perf_counter()
+        _block(runner(state, sel, train, k))
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--snr-db", type=float, default=20.0)
+    ap.add_argument("--max-overhead", type=float, default=0.0,
+                    help="fail (exit 1) if the noiseless cell's time "
+                         "exceeds this multiple of the exact baseline "
+                         "(0 = report only)")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_channel.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+
+    n = args.clients
+    ds = make_dataset("teacher", n=4096, dim=24, n_classes=8, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, n, gamma=0.5, seed=0))
+    model = make_classifier("mlp", input_shape=(24,), n_classes=8, width=8)
+    plan = make_plan("adhoc", budget_law(n, beta=4), args.rounds, seed=0)
+
+    base = dict(strategy="cc", local_steps=args.local_steps,
+                batch_size=32, lr=0.1)
+    cells = {}
+    print(f"clients={n} rounds={args.rounds} devices={len(jax.devices())} "
+          f"(best of {args.reps})")
+    # "exact" and "noiseless" are the same config measured twice — the
+    # gate compares two runs of the identical code path, so it bounds
+    # refactor cost without rewarding or punishing machine noise
+    for label, extra in [
+            ("exact", {}),
+            ("noiseless", dict(channel="noiseless")),
+            ("aircomp", dict(channel="aircomp",
+                             channel_snr_db=args.snr_db,
+                             channel_fading=True))]:
+        fed = FedConfig(**base, **extra)
+        best = _bench_cell(args, fed, model, fd, plan)
+        cells[label] = best
+        print(f"{label:10s} {best * 1e3:8.1f} ms "
+              f"({n * args.rounds / best:9.1f} client-rounds/s)")
+        print(f"csv,channel,{label},{best * 1e6:.0f}")
+
+    overhead_noiseless = cells["noiseless"] / cells["exact"]
+    overhead_aircomp = cells["aircomp"] / cells["exact"]
+    print(f"noiseless vs exact: {overhead_noiseless:.3f}x; "
+          f"aircomp vs exact: {overhead_aircomp:.3f}x")
+
+    if args.json:
+        payload = {
+            "bench": "channel_overhead",
+            "config": {"clients": n, "rounds": args.rounds,
+                       "local_steps": args.local_steps, "reps": args.reps,
+                       "snr_db": args.snr_db,
+                       "devices": len(jax.devices())},
+            "cells_s": cells,
+            "noiseless_overhead_vs_exact": overhead_noiseless,
+            "aircomp_overhead_vs_exact": overhead_aircomp,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    if args.max_overhead:
+        if overhead_noiseless > args.max_overhead:
+            print(f"FAIL: noiseless overhead {overhead_noiseless:.2f}x "
+                  f"exceeds budget {args.max_overhead:.2f}x")
+            return 1
+        print(f"noiseless overhead {overhead_noiseless:.2f}x within "
+              f"budget {args.max_overhead:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,19 @@ Zero latency with K=1 (the defaults) is bit-for-bit the scan executor:
         --async-buffer 4 --staleness-decay 0.8 --set async_latency=2.0
     python -m repro sweep exp.json --set executor=async \
         --grid staleness_decay=0.5,0.8,1.0
+
+Strategies and channels: ``--strategy`` picks the aggregation strategy
+(choices generated from the registry, including the proximal ``fedprox``
+with ``--set prox_mu=0.1`` and the dynamic-regularization ``feddyn`` with
+``--set feddyn_alpha=0.1``); ``--channel aircomp`` uploads deltas over a
+noisy over-the-air channel at ``--snr-db`` receive SNR, ``--set
+channel_fading=true`` adds per-client Rayleigh gains:
+
+    python -m repro run exp.json --strategy fedprox --set prox_mu=0.1
+    python -m repro run exp.json --channel aircomp --snr-db 10 \
+        --set channel_fading=true
+    python -m repro sweep exp.json --channel aircomp --grid \
+        channel_snr_db=0,10,20
 """
 from __future__ import annotations
 
@@ -108,7 +121,10 @@ def _load_spec(path: str, sets: list[str],
                compress: str | None = None,
                async_buffer: int | None = None,
                staleness_decay: float | None = None,
-               history_store: str | None = None) -> ExperimentSpec:
+               history_store: str | None = None,
+               strategy: str | None = None,
+               channel: str | None = None,
+               snr_db: float | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
     if policy:
@@ -129,6 +145,12 @@ def _load_spec(path: str, sets: list[str],
         overrides["staleness_decay"] = staleness_decay
     if history_store:
         overrides["history_store"] = history_store
+    if strategy:
+        overrides["strategy"] = strategy
+    if channel:
+        overrides["channel"] = channel
+    if snr_db is not None:
+        overrides["channel_snr_db"] = snr_db
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -156,7 +178,9 @@ def cmd_run(args) -> int:
                       edge_period=args.edge_period, compress=args.compress,
                       async_buffer=args.async_buffer,
                       staleness_decay=args.staleness_decay,
-                      history_store=args.history_store)
+                      history_store=args.history_store,
+                      strategy=args.strategy, channel=args.channel,
+                      snr_db=args.snr_db)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -197,7 +221,9 @@ def cmd_sweep(args) -> int:
                       edge_period=args.edge_period, compress=args.compress,
                       async_buffer=args.async_buffer,
                       staleness_decay=args.staleness_decay,
-                      history_store=args.history_store)
+                      history_store=args.history_store,
+                      strategy=args.strategy, channel=args.channel,
+                      snr_db=args.snr_db)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
@@ -207,7 +233,19 @@ def cmd_sweep(args) -> int:
 
 def _add_policy_flags(p: argparse.ArgumentParser) -> None:
     from repro.core.budget import POLICY_KINDS
+    from repro.core.channel import CHANNEL_KINDS
     from repro.core.hierarchy import TOPOLOGY_KINDS
+    from repro.core.strategies import available_strategies
+    p.add_argument("--strategy", default=None,
+                   choices=available_strategies(),
+                   help="aggregation strategy (shorthand for --set "
+                        "strategy=...; choices come from the registry)")
+    p.add_argument("--channel", default=None, choices=CHANNEL_KINDS,
+                   help="uplink channel model (shorthand for --set "
+                        "channel=...; aircomp adds AWGN at --snr-db)")
+    p.add_argument("--snr-db", type=float, default=None,
+                   help="aircomp receive SNR in dB (shorthand for --set "
+                        "channel_snr_db=...; needs --channel aircomp)")
     p.add_argument("--policy", default=None, choices=POLICY_KINDS,
                    help="budget policy (shorthand for --set policy=...)")
     p.add_argument("--device-profile", default=None,

@@ -131,7 +131,8 @@ class Session:
                                             compress=fed.compress,
                                             async_cfg=async_cfg,
                                             needs_stale=fed.resolve()
-                                            .needs_stale)
+                                            .needs_stale,
+                                            strategy=fed.resolve())
         self._t = 0                              # completed rounds
         self._sel = jnp.asarray(plan.selection)
         self._cohort = None
@@ -141,8 +142,26 @@ class Session:
             # profile (load dynamics never depend on training decisions),
             # keyed by absolute round — a resumed session replays the same
             # dispatch/delivery/merge events
+            sel_np = np.asarray(plan.selection)
+            if fed.cohort_size is not None:
+                if fed.cohort_size < async_cfg.buffer_size:
+                    raise ValueError(
+                        f"cohort_size={fed.cohort_size} < async_buffer="
+                        f"{async_cfg.buffer_size} can never fill the merge "
+                        "buffer — the merge loop deadlocks; raise "
+                        "cohort_size or lower async_buffer")
+                # absolute-round-keyed cohort thinning: only sampled
+                # cohort members may dispatch each round (same sampler
+                # contract as the sharded executor, so a resumed session
+                # replays the identical arrival stream)
+                sampler = CohortSampler(data.n_clients, fed.cohort_size,
+                                        seed=fed.seed)
+                idx = np.asarray(sampler.indices(plan.rounds))
+                member = np.zeros(sel_np.shape, dtype=bool)
+                np.put_along_axis(member, idx, True, axis=1)
+                sel_np = sel_np & member
             self._sched = simulate_arrivals(
-                profile, np.asarray(plan.selection),
+                profile, sel_np,
                 buffer_size=async_cfg.buffer_size,
                 latency=async_cfg.latency, jitter=async_cfg.jitter)
         if executor == "sharded":
@@ -357,7 +376,8 @@ class Session:
                               topology=self.topology,
                               compress=self.fed.compress,
                               async_cfg=self.async_cfg,
-                              needs_stale=self.fed.resolve().needs_stale)
+                              needs_stale=self.fed.resolve().needs_stale,
+                              strategy=self.fed.resolve())
         state, extra = mgr.restore(like, step=step)
         self.state = state
         self._t = int(extra.get("round", extra.get("step", 0)))

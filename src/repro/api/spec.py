@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.async_rounds import (STALENESS_SCHEDULES, AsyncConfig)
 from repro.core.budget import POLICY_KINDS, BudgetPolicy, make_policy
+from repro.core.channel import CHANNEL_KINDS
 from repro.core.hierarchy import TOPOLOGY_KINDS, EdgeTopology
 from repro.core.history_store import STORE_KINDS
 from repro.core.rounds import FedConfig
@@ -41,8 +42,27 @@ from repro.system.devices import (DeviceProfile, edge_scaled_profile,
 #: edge topologies — topology/n_edges/edge_period/edge_speed/edge_harvest;
 #: v4: int8 Δ-history compression — compress; v5: async executor —
 #: async_buffer/staleness_decay/staleness_schedule/async_latency/
-#: async_jitter/history_store)
-SPEC_VERSION = 5
+#: async_jitter/history_store; v6: fedprox/feddyn hyperparameters +
+#: uplink channel — prox_mu/feddyn_alpha/channel/channel_snr_db/
+#: channel_fading)
+SPEC_VERSION = 6
+
+#: first spec version each non-v1 field appeared in — ``from_dict`` uses
+#: this to reject a field that postdates the version a spec declares with
+#: a precise message instead of an opaque ``TypeError`` from ``cls(**d)``
+_FIELD_INTRO = {
+    **{f: 2 for f in ("policy", "device_profile", "energy_capacity",
+                      "energy_init", "harvest_scale", "load_mean",
+                      "load_rho", "load_jitter", "deadline", "adapt_eta")},
+    **{f: 3 for f in ("topology", "n_edges", "edge_period", "edge_speed",
+                      "edge_harvest")},
+    "compress": 4,
+    **{f: 5 for f in ("async_buffer", "staleness_decay",
+                      "staleness_schedule", "async_latency",
+                      "async_jitter", "history_store")},
+    **{f: 6 for f in ("channel", "channel_snr_db", "channel_fading",
+                      "prox_mu", "feddyn_alpha")},
+}
 
 _COMPRESS = ("none", "int8")
 
@@ -109,6 +129,16 @@ class ExperimentSpec:
     batch_size: int = 32
     lr: float = 0.05
     tau: int = 100
+    prox_mu: float = 0.0           # FedProx proximal weight (strategy="fedprox")
+    feddyn_alpha: float = 0.0      # FedDyn regularization α (strategy="feddyn")
+
+    # ---- uplink channel (core/channel.py) -------------------------------
+    #: aggregation uplink model: "noiseless" (exact, bit-for-bit) |
+    #: "aircomp" (over-the-air superposition: AWGN at channel_snr_db,
+    #: optional per-client Rayleigh fading)
+    channel: str = "noiseless"
+    channel_snr_db: float = 20.0   # receive SNR in dB (channel="aircomp")
+    channel_fading: bool = False   # Rayleigh gains (channel="aircomp")
 
     # ---- plan -----------------------------------------------------------
     schedule: str = "adhoc"
@@ -191,10 +221,10 @@ class ExperimentSpec:
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
         if self.cohort_size is not None:
-            if self.executor != "sharded":
+            if self.executor not in ("sharded", "async"):
                 raise ValueError("cohort_size requires executor='sharded' "
-                                 "(only the sharded executor samples "
-                                 "cohorts)")
+                                 "or executor='async' (the other executors "
+                                 "run the full federation every round)")
             if not 1 <= self.cohort_size <= self.n_clients:
                 raise ValueError(
                     f"cohort_size must be in [1, {self.n_clients}], "
@@ -256,6 +286,14 @@ class ExperimentSpec:
                     f"async_buffer must be <= n_clients="
                     f"{self.n_clients} (each client parks at most one "
                     f"update in the merge buffer), got {self.async_buffer}")
+            if (self.cohort_size is not None
+                    and self.cohort_size < self.async_buffer):
+                raise ValueError(
+                    f"cohort_size={self.cohort_size} < async_buffer="
+                    f"{self.async_buffer} can never fill the merge buffer "
+                    "— at most cohort_size updates are ever in flight, so "
+                    "the merge loop deadlocks; raise cohort_size or lower "
+                    "async_buffer")
         else:
             _check("staleness_schedule", self.staleness_schedule,
                    STALENESS_SCHEDULES)
@@ -271,6 +309,28 @@ class ExperimentSpec:
                     f"{off} require executor='async' (only the async "
                     "executor runs the arrival process and staleness-"
                     "decayed merges)")
+        _check("channel", self.channel, CHANNEL_KINDS)
+        if self.channel != "aircomp":
+            chan_defaults = dict(channel_snr_db=20.0, channel_fading=False)
+            off = [k for k, v in chan_defaults.items()
+                   if getattr(self, k) != v]
+            if off:
+                raise ValueError(
+                    f"{off} require channel='aircomp' (the noiseless "
+                    "channel has no SNR or fading)")
+        if self.prox_mu < 0:
+            raise ValueError(f"prox_mu must be >= 0, got {self.prox_mu}")
+        if self.feddyn_alpha < 0:
+            raise ValueError(f"feddyn_alpha must be >= 0, got "
+                             f"{self.feddyn_alpha}")
+        if self.prox_mu != 0.0 and self.strategy != "fedprox":
+            raise ValueError(
+                f"prox_mu={self.prox_mu} requires strategy='fedprox' "
+                f"(got strategy={self.strategy!r})")
+        if self.feddyn_alpha != 0.0 and self.strategy != "feddyn":
+            raise ValueError(
+                f"feddyn_alpha={self.feddyn_alpha} requires "
+                f"strategy='feddyn' (got strategy={self.strategy!r})")
         self.fed_config()               # validates strategy name eagerly
 
     # ---- serialization --------------------------------------------------
@@ -287,13 +347,29 @@ class ExperimentSpec:
     def from_dict(cls, d: dict) -> "ExperimentSpec":
         d = dict(d)
         version = d.pop("spec_version", SPEC_VERSION)
-        if version > SPEC_VERSION:
-            raise ValueError(f"spec_version {version} is newer than "
-                             f"supported {SPEC_VERSION}")
         known = {f.name for f in dataclasses.fields(cls)}
-        unknown = set(d) - known
+        unknown = sorted(set(d) - known)
+        if version > SPEC_VERSION:
+            hint = (f"; it also carries unknown fields {unknown} — likely "
+                    "written by a newer schema" if unknown else "")
+            raise ValueError(f"spec_version {version} is newer than "
+                             f"supported {SPEC_VERSION}{hint}")
         if unknown:
-            raise ValueError(f"unknown spec fields: {sorted(unknown)}")
+            raise ValueError(f"unknown spec fields: {unknown}")
+        # a field that postdates the declared version is only an error
+        # when it carries a non-default value — at its default it is
+        # indistinguishable from absent (old writers + new round-trips)
+        defaults = {f.name: f.default for f in dataclasses.fields(cls)}
+        late = sorted((k, _FIELD_INTRO[k]) for k in d
+                      if _FIELD_INTRO.get(k, 1) > version
+                      and d[k] != defaults.get(k))
+        if late:
+            k, intro = late[0]
+            raise ValueError(
+                f"field {k!r} was introduced in spec v{intro}, but this "
+                f"spec declares spec_version={version}; update "
+                f"spec_version or drop "
+                f"{sorted(name for name, _ in late)}")
         for key in ("p", "edge_speed", "edge_harvest"):
             if d.get(key) is not None:
                 d[key] = tuple(d[key])
@@ -327,7 +403,12 @@ class ExperimentSpec:
                          batch_size=self.batch_size, lr=self.lr,
                          tau=self.tau, seed=self.seed,
                          cohort_size=self.cohort_size,
-                         compress=self.compress)
+                         compress=self.compress,
+                         prox_mu=self.prox_mu,
+                         feddyn_alpha=self.feddyn_alpha,
+                         channel=self.channel,
+                         channel_snr_db=self.channel_snr_db,
+                         channel_fading=self.channel_fading)
 
     def budgets(self) -> np.ndarray:
         if self.budget == "power":

@@ -39,6 +39,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core.channel import TAG_MERGE, uplink_channel
 from repro.core.history_store import STORE_KINDS, HistoryStore
 from repro.core.rounds import (_BASE_KEYS, FedConfig, _round_keys,
                                _train_clients)
@@ -178,6 +179,7 @@ def make_async_round_body(model: Classifier, data: FederatedData,
        zero update (numerically what an empty synchronous round applies).
     """
     strategy = fed.resolve()
+    channel = uplink_channel(fed)
     n = data.n_clients
 
     def round_body(state, train_row, dispatch, deliver, merge_flag,
@@ -194,7 +196,9 @@ def make_async_round_body(model: Classifier, data: FederatedData,
 
         # ---- 2. compute from the pulled models -------------------------
         local = _train_clients(model, fed, start, keys, data.x, data.y,
-                               data.sizes, k_active)
+                               data.sizes, k_active,
+                               prox=strategy.prox_coeff(),
+                               dual=strategy.local_dual(state))
         trained_delta = tree_sub(local, start)
 
         # ---- 3. deliveries: synchronous round semantics at arrival -----
@@ -221,6 +225,9 @@ def make_async_round_body(model: Classifier, data: FederatedData,
             hist_prev = local
         hist = {"deltas": hist_deltas, "prev_local": hist_prev,
                 "trained_ever": state["trained_ever"]}
+        for hk in strategy.extra_history_keys():
+            if hk in state:
+                hist[hk] = state[hk]
         t_mask = deliver & inflight_train
         ctx = RoundCtx(sel_mask=deliver, train_mask=t_mask,
                        k_active=k_active, round=rnd, tau=fed.tau,
@@ -259,8 +266,17 @@ def make_async_round_body(model: Classifier, data: FederatedData,
 
         def _merge(_):
             aggf = strategy.agg_mask(mctx).astype(jnp.float32)
-            d = strategy.merge_stale(pending, aggf, pending_stale, decay_w,
+            up = pending
+            if channel is not None:
+                # merge-time uplink: the buffered cohort transmits over
+                # the air NOW — gains and AWGN key on the MERGE round
+                up = channel.fade(up, rnd,
+                                  jnp.arange(n, dtype=jnp.int32), n,
+                                  TAG_MERGE)
+            d = strategy.merge_stale(up, aggf, pending_stale, decay_w,
                                      mctx)
+            if channel is not None:
+                d = channel.corrupt(d, rnd, TAG_MERGE)
             return (tree_add(params, d), jnp.zeros((n,), bool),
                     jnp.ones((), jnp.int32), occ)
 
@@ -304,6 +320,11 @@ def make_async_round_body(model: Classifier, data: FederatedData,
         }
         if "prev_local" in state:
             out["prev_local"] = prev_local
+        # strategy extras (e.g. feddyn's dual) roll on DELIVERED trained
+        # rows — ctx's sel∧train is deliver∧inflight_train, exactly the
+        # rows whose Δ history advanced above
+        out.update(strategy.update_extra_history(hist, ctx, trained_delta,
+                                                 local, est))
         return out
 
     return round_body
@@ -357,6 +378,8 @@ def make_async_span_runner(model: Classifier, data: FederatedData,
             f"{n}")
     rows = profile.rows()
     ids = jnp.arange(n, dtype=jnp.int32)
+    # strategy extras (e.g. feddyn's dual rows) ride the base round state
+    base_keys = _ASYNC_BASE_KEYS + fed.resolve().extra_history_keys()
 
     def policy_round(state, dispatch, deliver, merge_flag, k_active):
         dev = state["device"]
@@ -364,7 +387,7 @@ def make_async_span_runner(model: Classifier, data: FederatedData,
                           profile.seed)
         train_row, new_rows = policy.decide(state["policy"], bctx)
         train_row = train_row & dispatch
-        base_state = {k: state[k] for k in _ASYNC_BASE_KEYS if k in state}
+        base_state = {k: state[k] for k in base_keys if k in state}
         new_base = round_body(base_state, train_row, dispatch, deliver,
                               merge_flag, k_active, energy=dev["energy"])
         # energy drains when the work is dispatched (the compute happens

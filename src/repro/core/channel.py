@@ -1,0 +1,146 @@
+"""Pluggable uplink-channel models for the federated aggregation path.
+
+The paper treats aggregation as an *exact* masked mean — every executor
+in :mod:`repro.core.rounds` reproduces that bit-for-bit.  The 6G
+edge-AI scenario instead uploads client deltas over an analog
+**over-the-air computation** (AirComp) channel: clients transmit
+simultaneously, the medium superimposes their signals, and the server
+receives the sum plus additive white Gaussian noise, optionally through
+per-client Rayleigh fading gains.  This module models that uplink as a
+pure function of a dedicated PRNG stream so it can be dropped in front
+of any ``strategy.aggregate`` / ``strategy.merge_stale`` call:
+
+* :meth:`UplinkChannel.fade` — per-client amplitude gains applied to the
+  stacked uploads *before* aggregation.  Gains are drawn for the **full
+  federation** keyed only on ``(seed, tag, round)`` and indexed by
+  absolute client ids, so a sharded cohort or an edge shard sees exactly
+  the gains the flat executor would — cross-executor equivalence is by
+  construction, not by luck.
+* :meth:`UplinkChannel.corrupt` — AWGN on the aggregated signal.  For a
+  linear aggregate, noise-on-the-superposition and noise-on-the-mean
+  differ only by the (deterministic) denominator, so corrupting the
+  aggregated tree is equivalent to corrupting the superposed sum with a
+  rescaled variance; doing it post-aggregation makes the channel
+  executor-agnostic (and post-``psum`` the draw is replicated across
+  shards because the key does not depend on the shard).
+
+PRNG-stream isolation
+---------------------
+Channel keys fold a dedicated salt (``_CHANNEL_SALT``) and a per-hop tag
+into ``PRNGKey(seed)`` before the round counter, so they can never
+collide with the training streams (``rounds._round_keys`` splits the
+carried key; :func:`repro.system.devices.stateless_uniform` folds the
+raw ``(seed, round, client)`` path; the latency stream salts with
+``_LATENCY_SALT``).  ``kind="noiseless"`` short-circuits to the input —
+and executors skip the channel entirely when
+:func:`uplink_channel` returns ``None`` — so the default configuration
+is trace-identical to the pre-channel code, keeping every pinned
+bit-for-bit test untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree
+
+#: registered channel kinds, in spec/CLI order
+CHANNEL_KINDS = ("noiseless", "aircomp")
+
+#: dedicated fold-in salt of the channel PRNG stream (cf. devices.py's
+#: ``_LATENCY_SALT = 9176``); never used by any training key derivation
+_CHANNEL_SALT = 7415
+
+# per-hop tags: each uplink tier draws its own independent realization
+TAG_UPLINK = 1   #: flat / scan / fused / sharded client→server uplink
+TAG_C2E = 2      #: hierarchical client→edge tier
+TAG_E2S = 3      #: hierarchical edge→server tier
+TAG_MERGE = 4    #: async merge-time uplink (keyed on the merge round)
+
+
+@dataclasses.dataclass(frozen=True)
+class UplinkChannel:
+    """One uplink realization model; hashable, safe as a jit static."""
+
+    kind: str = "noiseless"
+    #: receive SNR in dB relative to the rms of the aggregated signal
+    snr_db: float = 20.0
+    #: draw per-client Rayleigh amplitude gains (unit mean power)
+    fading: bool = False
+    #: base seed of the dedicated channel stream
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in CHANNEL_KINDS:
+            raise ValueError(f"unknown channel kind {self.kind!r}; "
+                             f"expected one of {CHANNEL_KINDS}")
+
+    # -- key derivation ---------------------------------------------------
+    def _key(self, rnd, tag: int, sub=0):
+        k = jax.random.fold_in(jax.random.PRNGKey(self.seed), _CHANNEL_SALT)
+        k = jax.random.fold_in(k, tag)
+        k = jax.random.fold_in(k, rnd)
+        return jax.random.fold_in(k, sub)
+
+    # -- fading -----------------------------------------------------------
+    def gains(self, rnd, client_ids, n_total: int, tag: int, sub=0):
+        """``(len(client_ids),)`` Rayleigh amplitude gains, E[h²] = 1.
+
+        Drawn for all ``n_total`` clients keyed only on
+        ``(seed, tag, round, sub)`` and indexed by absolute client ids,
+        so any cohort/shard slicing sees consistent per-client gains.
+        """
+        z = jax.random.normal(self._key(rnd, tag, sub), (2, n_total))
+        h = jnp.sqrt((z[0] ** 2 + z[1] ** 2) / 2.0)
+        return h[client_ids]
+
+    def fade(self, tree: PyTree, rnd, client_ids, n_total: int, tag: int,
+             sub=0) -> PyTree:
+        """Scale stacked per-client uploads by this round's fading gains.
+
+        Identity (the input object itself) when noiseless or fading is
+        off — callers may rely on that for bit-exactness.
+        """
+        if self.kind == "noiseless" or not self.fading:
+            return tree
+        g = self.gains(rnd, client_ids, n_total, tag, sub)
+        return jax.tree.map(
+            lambda x: g.reshape((-1,) + (1,) * (x.ndim - 1))
+            .astype(x.dtype) * x, tree)
+
+    # -- additive noise ---------------------------------------------------
+    def corrupt(self, tree: PyTree, rnd, tag: int, sub=0) -> PyTree:
+        """Add AWGN at ``snr_db`` below the tree's global rms.
+
+        ``sigma = rms(tree) · 10^(−snr_db/20)`` — i.e. the noise *power*
+        is ``10^(−snr_db/10)`` of the signal power, the standard receive
+        -SNR convention.  Identity when noiseless.
+        """
+        if self.kind == "noiseless":
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        total = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in leaves)
+        count = max(sum(x.size for x in leaves), 1)
+        sigma = jnp.sqrt(total / count) * 10.0 ** (-self.snr_db / 20.0)
+        key = self._key(rnd, tag, sub)
+        out = [x + (sigma * jax.random.normal(jax.random.fold_in(key, i),
+                                              x.shape)).astype(x.dtype)
+               for i, x in enumerate(leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+
+def uplink_channel(fed) -> Optional[UplinkChannel]:
+    """The :class:`UplinkChannel` of a FedConfig, or ``None`` if noiseless.
+
+    Executors guard every channel call with ``if channel is not None`` —
+    returning ``None`` here (rather than a no-op channel object) keeps
+    the noiseless trace literally identical to the pre-channel code.
+    """
+    if fed.channel == "noiseless":
+        return None
+    return UplinkChannel(kind=fed.channel, snr_db=fed.channel_snr_db,
+                         fading=fed.channel_fading, seed=fed.seed)

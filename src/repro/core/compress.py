@@ -38,9 +38,18 @@ class QuantizedTree(NamedTuple):
 
 
 def quantize_tree(tree: PyTree) -> QuantizedTree:
-    """Symmetric per-leaf int8 quantization (scale = max|x| / 127)."""
+    """Symmetric per-leaf int8 quantization (scale = max|x| / 127).
+
+    Degenerate leaves round-trip exactly: an empty leaf gets a unit
+    scale (``jnp.max`` over zero elements raises, even under jit), a
+    0-d leaf quantizes like a 1-element array, and an all-zero leaf
+    dequantizes to exact zeros (the 1e-12 scale floor never divides
+    a nonzero payload into existence).
+    """
     def q(x):
         xf = x.astype(jnp.float32)
+        if xf.size == 0:
+            return xf.astype(jnp.int8), jnp.ones((), jnp.float32)
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / _QMAX
         return jnp.clip(jnp.round(xf / scale), -_QMAX, _QMAX
                         ).astype(jnp.int8), scale

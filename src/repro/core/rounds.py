@@ -63,6 +63,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.channel import (TAG_C2E, TAG_E2S, TAG_UPLINK,
+                                uplink_channel)
 from repro.core.strategies import (RoundCtx, Strategy, get_strategy,
                                    masked_select)
 from repro.data.federated import FederatedData
@@ -108,8 +110,21 @@ class FedConfig:
     #: Δ-history wire/storage format: "none" keeps f32, "int8" stores the
     #: (N, P) history quantized per client row (fused executor only)
     compress: str = "none"
+    #: μ of fedprox's proximal term (0.0 = plain FedAvg local objective)
+    prox_mu: float = 0.0
+    #: α of feddyn's dynamic regularizer (0.0 = dual state switched off)
+    feddyn_alpha: float = 0.0
+    #: uplink model applied to the stacked uploads before aggregation
+    #: (:mod:`repro.core.channel`): "noiseless" keeps the exact masked
+    #: mean, "aircomp" models analog over-the-air superposition
+    channel: str = "noiseless"
+    #: aircomp receive SNR in dB relative to the aggregated signal's rms
+    channel_snr_db: float = 20.0
+    #: draw per-client Rayleigh fading gains on every uplink
+    channel_fading: bool = False
 
     def __post_init__(self):
+        from repro.core.channel import CHANNEL_KINDS
         strategy = get_strategy(self.strategy)  # raises on unknown names
         if self.cohort_size is not None and self.cohort_size < 1:
             raise ValueError(
@@ -124,20 +139,43 @@ class FedConfig:
                 f"the fused kernel path consumes; strategy "
                 f"{self.strategy!r} is not fused-capable — use "
                 f"compress='none'")
+        if self.channel not in CHANNEL_KINDS:
+            raise ValueError(
+                f"channel must be one of {CHANNEL_KINDS}, got "
+                f"{self.channel!r}")
+        if self.prox_mu < 0:
+            raise ValueError(f"prox_mu must be >= 0, got {self.prox_mu}")
+        if self.feddyn_alpha < 0:
+            raise ValueError(
+                f"feddyn_alpha must be >= 0, got {self.feddyn_alpha}")
 
     def resolve(self) -> Strategy:
-        return get_strategy(self.strategy)
+        """The registered strategy, with this config's hyperparameters
+        bound via :meth:`repro.core.strategies.Strategy.configure`."""
+        return get_strategy(self.strategy).configure(self)
 
 
 def _local_train(model: Classifier, params, key, cx, cy, size,
-                 k_steps: int, k_active, batch_size: int, lr: float):
+                 k_steps: int, k_active, batch_size: int, lr: float,
+                 prox: float = 0.0, dual=None):
     """K local SGD steps on one client (Eq. 2). ``k_active`` ≤ k_steps masks
-    steps off for FedNova's reduced-iteration budget."""
+    steps off for FedNova's reduced-iteration budget.
+
+    ``prox`` > 0 adds FedProx/FedDyn's proximal gradient μ(w − x_t) toward
+    the start params; ``dual`` (a params-shaped tree) subtracts FedDyn's
+    per-client gradient correction h_i. Both default OFF at the Python
+    level, leaving the base trace bit-identical."""
+    x0 = params
     def step(carry, k):
         p, key = carry
         key, sk = jax.random.split(key)
         idx = jax.random.randint(sk, (batch_size,), 0, 2 ** 30) % size
         g = jax.grad(lambda q: xent_loss(model, q, cx[idx], cy[idx]))(p)
+        if prox:
+            g = jax.tree.map(lambda gv, pv, ov: gv + prox * (pv - ov),
+                             g, p, x0)
+        if dual is not None:
+            g = jax.tree.map(lambda gv, hv: gv - hv, g, dual)
         new = jax.tree.map(lambda a, b: a - lr * b, p, g)
         do = k < k_active
         p = jax.tree.map(
@@ -152,7 +190,7 @@ def _local_train(model: Classifier, params, key, cx, cy, size,
 def init_fed_state(rng, model: Classifier, n_clients: int, *,
                    policy=None, profile=None, topology=None,
                    compress: str = "none", async_cfg=None,
-                   needs_stale: bool = True) -> PyTree:
+                   needs_stale: bool = True, strategy=None) -> PyTree:
     """Fresh federated state. With ``policy`` + ``profile`` the carry also
     holds the budget-policy rows, the simulated device state and the
     energy/cost ledger (policy mode); without, the seed-era 6-key state.
@@ -171,7 +209,12 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
     the async executor's FedBuff carry under ``state["async"]`` and, with
     ``history_store="int8"``, swaps the Δ history for the quantized
     :class:`repro.core.history_store.HistoryStore` carry (the async
-    analogue of ``compress="int8"``, same prev_local-dropping rule)."""
+    analogue of ``compress="int8"``, same prev_local-dropping rule).
+
+    ``strategy`` (a resolved :class:`repro.core.strategies.Strategy`)
+    additionally creates the strategy's extra history rows (e.g. feddyn's
+    per-client ``dual`` tree); omitted, the state carries only the base
+    keys — exactly the pre-extension layout."""
     params = model.init(rng)
     zeros = tree_broadcast_clients(tree_zeros_like(params), n_clients)
     state = {
@@ -182,6 +225,8 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
         "round": jnp.zeros((), jnp.int32),
         "key": rng,
     }
+    if strategy is not None:
+        state.update(strategy.init_extra_history(params, n_clients))
     if compress not in ("none", "int8"):
         raise ValueError(
             f"compress must be one of ('none', 'int8'), got {compress!r}")
@@ -231,42 +276,59 @@ def _round_keys(key, n: int):
 
 
 def _train_clients(model: Classifier, fed: FedConfig, start, keys,
-                   cx, cy, sizes, k_active):
+                   cx, cy, sizes, k_active, prox: float = 0.0, dual=None):
     """vmap local training over a client-stacked tree of start params —
     the per-client broadcast of the flat executors, or each client's edge
-    aggregator model under a two-tier topology."""
+    aggregator model under a two-tier topology. ``dual`` is an optional
+    client-stacked tree of FedDyn correction rows, vmapped alongside."""
+    if dual is None:
+        return jax.vmap(
+            lambda p, k, x, y, sz, ka: _local_train(
+                model, p, k, x, y, sz, fed.local_steps, ka,
+                fed.batch_size, fed.lr, prox)
+        )(start, keys, cx, cy, sizes, k_active)
     return jax.vmap(
-        lambda p, k, x, y, sz, ka: _local_train(
+        lambda p, k, x, y, sz, ka, h: _local_train(
             model, p, k, x, y, sz, fed.local_steps, ka,
-            fed.batch_size, fed.lr)
-    )(start, keys, cx, cy, sizes, k_active)
+            fed.batch_size, fed.lr, prox, h)
+    )(start, keys, cx, cy, sizes, k_active, dual)
 
 
 def _train_cohort(model: Classifier, fed: FedConfig, params, keys,
-                  cx, cy, sizes, k_active):
+                  cx, cy, sizes, k_active, prox: float = 0.0, dual=None):
     """Broadcast the global model and vmap local training over a cohort
     (full federation or gathered participants)."""
     broadcast = tree_broadcast_clients(params, sizes.shape[0])
     local = _train_clients(model, fed, broadcast, keys, cx, cy, sizes,
-                           k_active)
+                           k_active, prox, dual)
     return broadcast, local
 
 
 def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
                   params, rnd, hist, cx, cy, sizes, keys,
                   sel_mask, train_mask, k_active, axis_name=None,
-                  energy=None):
+                  energy=None, channel=None, client_ids=None,
+                  n_total=None):
     """One round over a cohort view of the federation.
 
     ``hist`` holds the cohort's per-client rows (``deltas`` / ``prev_local``
-    / ``trained_ever``); every executor wraps this one traceable core. With
-    ``axis_name`` set the cohort axis is ``shard_map``'ed and aggregation
-    reduces across shards (the strategies' ``aggregate`` hooks psum), so
-    the returned global params are replicated.
+    / ``trained_ever`` + any strategy extras); every executor wraps this
+    one traceable core. With ``axis_name`` set the cohort axis is
+    ``shard_map``'ed and aggregation reduces across shards (the
+    strategies' ``aggregate`` hooks psum), so the returned global params
+    are replicated.
+
+    ``channel`` (an :class:`repro.core.channel.UplinkChannel`, or None
+    for the exact noiseless uplink) fades the stacked uploads before
+    aggregation — ``client_ids`` are the cohort's absolute ids into the
+    ``n_total``-client gain draw — and corrupts the aggregated delta with
+    this round's AWGN (post-psum, so the draw is replicated).
     Returns ``(new_params, new_hist)``.
     """
     broadcast, local = _train_cohort(model, fed, params, keys, cx, cy,
-                                     sizes, k_active)
+                                     sizes, k_active,
+                                     prox=strategy.prox_coeff(),
+                                     dual=strategy.local_dual(hist))
     trained_delta = tree_sub(local, broadcast)
 
     # ---- estimation for skipped clients --------------------------
@@ -280,9 +342,20 @@ def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
     est = strategy.estimate(hist, ctx)
     delta_i = masked_select(train_mask, trained_delta, est)
 
-    # ---- aggregation (Eq. 3 over Δ) -------------------------------
+    # ---- uplink + aggregation (Eq. 3 over Δ) ----------------------
+    # fading touches only the aggregated copy of the uploads — history
+    # keeps each client's true delta, exactly as a receiver cannot
+    # corrupt what the client stores locally
+    up = delta_i
+    if channel is not None:
+        nt = n_total if n_total is not None else sel_mask.shape[0]
+        ids = (client_ids if client_ids is not None
+               else jnp.arange(nt, dtype=jnp.int32))
+        up = channel.fade(up, rnd, ids, nt, TAG_UPLINK)
     aggf = strategy.agg_mask(ctx).astype(jnp.float32)
-    delta = strategy.aggregate(delta_i, aggf, ctx)
+    delta = strategy.aggregate(up, aggf, ctx)
+    if channel is not None:
+        delta = channel.corrupt(delta, rnd, TAG_UPLINK)
     new_params = tree_add(params, delta)
 
     # ---- history updates ------------------------------------------
@@ -294,6 +367,8 @@ def _cohort_round(model: Classifier, fed: FedConfig, strategy: Strategy,
         "prev_local": prev_local,
         "trained_ever": hist["trained_ever"] | upd,
     }
+    new_hist.update(strategy.update_extra_history(hist, ctx, trained_delta,
+                                                  local, est))
     return new_params, new_hist
 
 
@@ -304,13 +379,14 @@ def make_round_body(model: Classifier, data: FederatedData, fed: FedConfig,
     strategy = fed.resolve()
     if fused:
         return _make_fused_round_body(model, data, fed, strategy)
+    channel = uplink_channel(fed)
 
     def round_body(state, sel_mask, train_mask, k_active, energy=None):
         key, keys = _round_keys(state["key"], data.n_clients)
         new_params, new_hist = _cohort_round(
             model, fed, strategy, state["params"], state["round"], state,
             data.x, data.y, data.sizes, keys, sel_mask, train_mask,
-            k_active, energy=energy)
+            k_active, energy=energy, channel=channel)
         return {
             "params": new_params,
             **new_hist,
@@ -343,12 +419,16 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
             "is not affine in the stored Δ / stale delta); use the "
             "tree-ops path")
     q8 = fed.compress == "int8"
+    channel = uplink_channel(fed)
+    n = data.n_clients
 
     def round_body(state, sel_mask, train_mask, k_active, energy=None):
         key, keys = _round_keys(state["key"], data.n_clients)
         broadcast, local = _train_cohort(model, fed, state["params"], keys,
                                          data.x, data.y, data.sizes,
-                                         k_active)
+                                         k_active,
+                                         prox=strategy.prox_coeff(),
+                                         dual=strategy.local_dual(state))
         flat_local, unravel_clients = tree_ravel_clients(local)
         flat_global, unravel = tree_ravel(state["params"])
         p = flat_global.shape[0]
@@ -364,6 +444,14 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
                        tau=fed.tau, stale_delta=None, trained_delta=None,
                        energy=energy)
         ep = strategy.fused_epilogue(ctx)
+        if channel is not None and channel.fading:
+            # fading scales only each client's aggregated contribution —
+            # fold the gains into the kernel's aggregation weights; the
+            # stored Δ history stays the client's true delta
+            gains = channel.gains(state["round"],
+                                  jnp.arange(n, dtype=jnp.int32), n,
+                                  TAG_UPLINK)
+            ep = ep._replace(agg_w=ep.agg_w * gains)
         stale_flat = None
         if strategy.needs_stale:
             stale = masked_select(
@@ -392,8 +480,15 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
                 ep.denom, ep.post_scale, stale_flat,
                 block=min(65536, p + pad))
             new_deltas = unravel_clients(new_flat[:, :p])
+        new_params = unravel(new_global[:p])
+        if channel is not None:
+            # the kernel already applied the (faded) aggregate; AWGN hits
+            # the aggregated delta exactly as in the tree-ops path
+            d = channel.corrupt(tree_sub(new_params, state["params"]),
+                                state["round"], TAG_UPLINK)
+            new_params = tree_add(state["params"], d)
         out = {
-            "params": unravel(new_global[:p]),
+            "params": new_params,
             "deltas": new_deltas,
             "trained_ever": state["trained_ever"] | upd,
             "round": state["round"] + 1,
@@ -402,6 +497,9 @@ def _make_fused_round_body(model: Classifier, data: FederatedData,
         if "prev_local" in state:
             out["prev_local"] = masked_select(upd, local,
                                               state["prev_local"])
+        if strategy.extra_history_keys():
+            out.update(strategy.update_extra_history(
+                state, ctx, tree_sub(local, broadcast), local, None))
         return out
 
     return round_body
@@ -457,6 +555,8 @@ def make_policy_round_body(model: Classifier, data: FederatedData,
     base = make_round_body(model, data, fed, fused=fused)
     rows = profile.rows()
     ids = jnp.arange(data.n_clients, dtype=jnp.int32)
+    # strategy extras (e.g. feddyn's dual rows) ride the base round state
+    base_keys = _BASE_KEYS + fed.resolve().extra_history_keys()
 
     def round_body(state, sel_mask, k_active):
         dev = state["device"]
@@ -465,7 +565,7 @@ def make_policy_round_body(model: Classifier, data: FederatedData,
         train_mask, new_rows = policy.decide(state["policy"], ctx)
         train_mask = train_mask & sel_mask
         # compress="int8" replay strategies carry no prev_local
-        base_state = {k: state[k] for k in _BASE_KEYS if k in state}
+        base_state = {k: state[k] for k in base_keys if k in state}
         new_base = base(base_state, sel_mask, train_mask, k_active,
                         energy=dev["energy"])
         spent = sel_mask & train_mask
@@ -575,17 +675,25 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
     cspec = ctx_sh.spec((CLIENT_AXIS,))       # shard leading (cohort) dim
     rspec = PartitionSpec()                   # replicated
 
+    channel = uplink_channel(fed)
+
     if policy is None:
         def shard_body(params, rnd, hist, keys, cx, cy, sizes, sel, train,
-                       ka):
+                       ka, ids):
+            # ids: this shard's slice of the cohort's ABSOLUTE client ids
+            # — fading gains are drawn for the full federation and indexed
+            # by them, so a sharded cohort sees exactly the flat gains;
+            # the post-aggregate AWGN keys only on (seed, tag, round), so
+            # the post-psum draw is replicated across shards
             return _cohort_round(model, fed, strategy, params, rnd, hist,
                                  cx, cy, sizes, keys, sel, train, ka,
-                                 axis_name=CLIENT_AXIS)
+                                 axis_name=CLIENT_AXIS, channel=channel,
+                                 client_ids=ids, n_total=n)
 
         cohort_round = shard_map(
             shard_body, mesh=mesh,
             in_specs=(rspec, rspec, cspec, cspec, cspec, cspec, cspec,
-                      cspec, cspec, cspec),
+                      cspec, cspec, cspec, cspec),
             out_specs=(rspec, cspec))
 
         @jax.jit
@@ -604,7 +712,7 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
                 new_params, new_hist = cohort_round(
                     st["params"], st["round"], hist, take(keys),
                     take(data.x), take(data.y), take(data.sizes),
-                    take(sel), take(train), take(k_active))
+                    take(sel), take(train), take(k_active), idx)
                 new_state = strategy.scatter_history(st, idx, new_hist)
                 new_state.update(params=new_params, round=st["round"] + 1,
                                  key=key)
@@ -634,7 +742,8 @@ def make_sharded_span_runner(model: Classifier, data: FederatedData,
         train = train & sel
         new_params, new_hist = _cohort_round(
             model, fed, strategy, params, rnd, hist, cx, cy, sizes, keys,
-            sel, train, ka, axis_name=CLIENT_AXIS, energy=dev["energy"])
+            sel, train, ka, axis_name=CLIENT_AXIS, energy=dev["energy"],
+            channel=channel, client_ids=ids, n_total=n)
         return new_params, new_hist, new_pol, train
 
     cohort_round = shard_map(
@@ -827,7 +936,18 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
         def edge_ids_of():
             return jnp.asarray(topo.assignment, jnp.int32)
 
-    hist_keys = ("deltas", "prev_local", "trained_ever")
+    hist_keys = strategy.history_keys
+    channel = uplink_channel(fed)
+
+    if shards > 1:
+        def client_ids_of():
+            """Absolute client ids of this shard's rows (uniform layout:
+            shard s holds the contiguous block s·n_local ...)."""
+            return (jax.lax.axis_index(EDGE_AXIS) * n_local
+                    + jnp.arange(n_local, dtype=jnp.int32))
+    else:
+        def client_ids_of():
+            return jnp.arange(n, dtype=jnp.int32)
 
     def hier_round(G, rnd, edge_params, hist, keys, cx, cy, sizes,
                    sel, train, k_active, energy=None):
@@ -836,7 +956,9 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
         edge_ids = edge_ids_of()
         client_start = jax.tree.map(lambda x: x[local_assign], edge_params)
         local = _train_clients(model, fed, client_start, keys, cx, cy,
-                               sizes, k_active)
+                               sizes, k_active,
+                               prox=strategy.prox_coeff(),
+                               dual=strategy.local_dual(hist))
         trained_delta = tree_sub(local, client_start)
         stale_delta = tree_sub(hist["prev_local"], client_start)
         stale_delta = masked_select(hist["trained_ever"], stale_delta,
@@ -848,6 +970,11 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
         est = strategy.estimate(hist, ctx)
         delta_i = masked_select(train, trained_delta, est)
         aggf = strategy.agg_mask(ctx).astype(jnp.float32)
+        # client→edge uplink fading: one gain draw per client per round,
+        # shared by whichever tier consumes the upload this round (the
+        # history still stores the true deltas — see _cohort_round)
+        up_i = (delta_i if channel is None else
+                channel.fade(delta_i, rnd, client_ids_of(), n, TAG_C2E))
 
         # ---- intra-edge tier: each edge aggregates only its members ---
         # Uniform layouts slice each edge's own block, so total work stays
@@ -859,11 +986,17 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
             for e in range(e_local):
                 if uniform:
                     sl = slice(e * block, (e + 1) * block)
-                    d_e = strategy.aggregate(_tree_rows(delta_i, sl),
+                    d_e = strategy.aggregate(_tree_rows(up_i, sl),
                                              aggf[sl], _slice_ctx(ctx, sl))
                 else:
                     member = (local_assign == e).astype(jnp.float32)
-                    d_e = strategy.aggregate(delta_i, aggf * member, ctx)
+                    d_e = strategy.aggregate(up_i, aggf * member, ctx)
+                if channel is not None:
+                    # independent AWGN per edge receiver, keyed on the
+                    # GLOBAL edge id so results are shard-layout-invariant
+                    ge = (e if shards == 1 else
+                          e + jax.lax.axis_index(EDGE_AXIS) * e_local)
+                    d_e = channel.corrupt(d_e, rnd, TAG_C2E, sub=ge)
                 parts.append(tree_add(tree_index(edge_params, e), d_e))
             return tree_stack(parts)
 
@@ -883,6 +1016,11 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
                 y = tree_add(delta_i,
                              tree_sub(client_start,
                                       tree_broadcast_clients(G, n_local)))
+            if channel is not None:
+                # the client transmits the WHOLE upload y_i (fresh delta +
+                # edge displacement) over the air — same gain draw as the
+                # intra tier, applied to the full signal
+                y = channel.fade(y, rnd, client_ids_of(), n, TAG_C2E)
             ctx_full = dataclasses.replace(
                 ctx, sel_mask=gather(sel), train_mask=gather(train),
                 k_active=gather(k_active),
@@ -892,6 +1030,12 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
                 edge_id=gather(edge_ids))
             d_global = strategy.aggregate(jax.tree.map(gather, y),
                                           gather(aggf), ctx_full)
+            if channel is not None:
+                # two independent hops — client→edge, then edge→server —
+                # both keyed only on (seed, tag, round), so every shard
+                # computes the identical replicated draws
+                d_global = channel.corrupt(d_global, rnd, TAG_C2E)
+                d_global = channel.corrupt(d_global, rnd, TAG_E2S)
             G_sync = tree_add(G, d_global)
             return G_sync, tree_broadcast_clients(G_sync, e_local)
 
@@ -913,8 +1057,11 @@ def make_hierarchical_span_runner(model: Classifier, data: FederatedData,
         deltas, prev_local = strategy.update_history(hist, ctx,
                                                      trained_delta, local,
                                                      est)
-        return {"deltas": deltas, "prev_local": prev_local,
-                "trained_ever": hist["trained_ever"] | (sel & train)}
+        out = {"deltas": deltas, "prev_local": prev_local,
+               "trained_ever": hist["trained_ever"] | (sel & train)}
+        out.update(strategy.update_extra_history(hist, ctx, trained_delta,
+                                                 local, est))
+        return out
 
     rspec, sspec = PartitionSpec(), PartitionSpec(EDGE_AXIS)
     state_spec = {"params": rspec, "round": rspec, "key": rspec,

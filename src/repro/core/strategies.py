@@ -28,10 +28,21 @@ Paper §III ↔ registry names:
     CC-FedAvg(c), Eq. 4             ``ccc``
     FedNova baseline [32]           ``fednova``
     decayed-Δ replay (extension)    ``cc_decay``
+    FedProx [prox term] (ext.)      ``fedprox``
+    FedDyn [dynamic reg.] (ext.)    ``feddyn``
     ==============================  ==========
+
+``fedprox``/``feddyn`` change the LOCAL objective rather than the
+estimate: :meth:`Strategy.configure` binds their μ/α from the FedConfig,
+:meth:`Strategy.prox_coeff` adds a proximal pull toward the broadcast
+model inside every SGD step, and FedDyn additionally carries a
+per-client dual (gradient-correction) state as an extra history key —
+threaded through the same ``gather_history``/``scatter_history``/
+checkpoint machinery as the Δ history.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -39,7 +50,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.utils.pytree import PyTree, tree_masked_mean, tree_zeros_like
+from repro.utils.pytree import (PyTree, tree_broadcast_clients,
+                                tree_masked_mean, tree_zeros_like)
 
 
 def masked_select(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
@@ -123,6 +135,27 @@ class Strategy:
 
     # ---- hooks ----------------------------------------------------------
 
+    def configure(self, fed) -> "Strategy":
+        """Bind per-run hyperparameters from a FedConfig (called by
+        ``FedConfig.resolve``). The default returns the registered
+        instance itself — plugins resolve to exactly the object that was
+        registered; strategies with spec-level knobs (fedprox's μ,
+        feddyn's α) override with a ``dataclasses.replace``."""
+        return self
+
+    def prox_coeff(self) -> float:
+        """μ of a proximal term μ/2·‖w − x_t‖² added to the local
+        objective. A static Python float: 0.0 (the default) leaves the
+        local-training trace literally unchanged."""
+        return 0.0
+
+    def local_dual(self, state: PyTree) -> PyTree | None:
+        """Per-client dual / gradient-correction rows subtracted from the
+        local gradient every step (FedDyn), or ``None`` for strategies
+        without one — executors skip the term entirely on ``None``, so
+        the default trace is unchanged."""
+        return None
+
     def estimate(self, state: PyTree, ctx: RoundCtx) -> PyTree:
         """Δ̂_t^i for skipping clients. Default: contribute nothing (the
         agg_mask below drops skippers anyway)."""
@@ -204,12 +237,34 @@ class Strategy:
     #: that keep extra history extend this tuple and the hooks below
     history_keys: tuple[str, ...] = ("deltas", "prev_local", "trained_ever")
 
+    def extra_history_keys(self) -> tuple[str, ...]:
+        """History keys beyond the base (deltas, prev_local, trained_ever)
+        triple — the rows :meth:`init_extra_history` creates and
+        :meth:`update_extra_history` rolls (e.g. feddyn's ``dual``)."""
+        return tuple(k for k in self.history_keys
+                     if k not in ("deltas", "prev_local", "trained_ever"))
+
+    def init_extra_history(self, params: PyTree, n_clients: int) -> dict:
+        """Fresh per-client rows for :meth:`extra_history_keys`; merged
+        into the federated state by ``init_fed_state``."""
+        return {}
+
+    def update_extra_history(self, state: PyTree, ctx: RoundCtx,
+                             trained_delta: PyTree, local: PyTree,
+                             est: PyTree) -> dict:
+        """Roll the extra history keys forward — the companion of
+        :meth:`update_history`, which keeps its (deltas, prev_local)
+        2-tuple contract. Must be mask-idempotent: rows outside
+        ``sel ∧ train`` come back bit-unchanged."""
+        return {}
+
     def gather_history(self, state: PyTree, idx: jax.Array) -> PyTree:
         """Pull the cohort's rows out of the full-N per-client history —
         the sharded executor moves only the active clients' state onto the
         client mesh each round."""
         take = functools.partial(jnp.take, indices=idx, axis=0)
-        return {k: jax.tree.map(take, state[k]) for k in self.history_keys}
+        return {k: jax.tree.map(take, state[k]) for k in self.history_keys
+                if k in state}
 
     def scatter_history(self, state: PyTree, idx: jax.Array,
                         updated: PyTree) -> PyTree:
@@ -218,7 +273,7 @@ class Strategy:
         def put(full, rows):
             return full.at[idx].set(rows)
         return {k: jax.tree.map(put, state[k], updated[k])
-                for k in self.history_keys}
+                for k in self.history_keys if k in state}
 
 
 # ---------------------------------------------------------------------------
@@ -421,6 +476,77 @@ class CCDecay(Strategy):
         return jax.tree.map(lambda d: self.gamma * d, deltas)
 
 
+@dataclass(frozen=True)
+class FedProx(Strategy):
+    """FedProx: the local objective gains a proximal term
+    μ/2·‖w − x_t‖² pulling each client back toward the broadcast model,
+    i.e. every local SGD step adds μ(w − x_t) to the gradient. Server
+    aggregation is plain FedAvg (train-only masked mean), so μ = 0 — the
+    registered default until :meth:`configure` binds ``fed.prox_mu`` —
+    IS FedAvg bit-for-bit."""
+    name: str = "fedprox"
+    fused_capable: bool = True
+    mu: float = 0.0
+
+    def configure(self, fed):
+        if fed.prox_mu == self.mu:
+            return self
+        return dataclasses.replace(self, mu=fed.prox_mu)
+
+    def prox_coeff(self):
+        return self.mu
+
+
+@dataclass(frozen=True)
+class FedDyn(Strategy):
+    """FedDyn: dynamic regularization with a per-client dual state h_i.
+
+    Each local step descends ∇F_i(w) + α(w − x_t) − h_i; after a client's
+    trained round the dual rolls h_i ← h_i − α·(x_K^i − x_t), so the
+    linear term asymptotically cancels client drift. The dual rows ride
+    the history machinery as the extra key ``dual`` (stacked like the Δ
+    history: gathered/scattered by cohort rounds, checkpointed with the
+    state). α = 0 — the registered default until :meth:`configure` binds
+    ``fed.feddyn_alpha`` — is FedAvg bit-for-bit: both gradient terms
+    and the dual roll switch off at the Python level."""
+    name: str = "feddyn"
+    fused_capable: bool = True
+    history_keys: tuple[str, ...] = ("deltas", "prev_local",
+                                     "trained_ever", "dual")
+    alpha: float = 0.0
+
+    def configure(self, fed):
+        if fed.feddyn_alpha == self.alpha:
+            return self
+        return dataclasses.replace(self, alpha=fed.feddyn_alpha)
+
+    def prox_coeff(self):
+        # FedDyn's quadratic penalty is exactly a proximal pull with μ = α
+        return self.alpha
+
+    def local_dual(self, state):
+        if self.alpha == 0.0:
+            return None
+        return state["dual"]
+
+    def init_extra_history(self, params, n_clients):
+        return {"dual": tree_broadcast_clients(tree_zeros_like(params),
+                                               n_clients)}
+
+    def update_extra_history(self, state, ctx, trained_delta, local, est):
+        if "dual" not in state:
+            # a legacy state initialized without this strategy carries no
+            # dual rows — behave as plain FedAvg and keep the carry stable
+            return {}
+        if self.alpha == 0.0:
+            return {"dual": state["dual"]}
+        upd = ctx.sel_mask & ctx.train_mask
+        rolled = jax.tree.map(lambda h, d: h - self.alpha * d,
+                              state["dual"], trained_delta)
+        return {"dual": masked_select(upd, rolled, state["dual"])}
+
+
 for _s in (FedAvg(), FedAvgDropout(), SkipRounds(), StaleModel(),
-           CCFedAvg(), CCFedAvgC(), FedNova(), CCDecay()):
+           CCFedAvg(), CCFedAvgC(), FedNova(), CCDecay(), FedProx(),
+           FedDyn()):
     register(_s)

@@ -1,0 +1,276 @@
+"""Properties of the uplink-channel abstraction and the FedDyn dual.
+
+Property tests (real hypothesis when installed; the deterministic replay
+shim otherwise):
+
+* the noiseless channel is a literal identity — ``fade``/``corrupt``
+  return the INPUT OBJECT, so executors guarded on ``uplink_channel()``
+  returning None can never diverge from exact aggregation;
+* aircomp AWGN lands at the configured receive SNR: the measured noise
+  power over a large tree is within 10% of ``10^(−snr_db/10)`` of the
+  signal power;
+* Rayleigh gains are cohort/shard-invariant: slicing any id subset out
+  of the full-federation draw equals drawing and indexing — the property
+  the sharded/hierarchical executors rely on for equivalence;
+* the FedDyn dual roll is mask-idempotent: clients outside
+  ``sel ∧ train`` keep their dual rows BIT-unchanged.
+
+Plus the spec-v6/deadlock regressions and the FedDyn checkpoint/resume
+bit-identity pin the ISSUE requires.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.channel import (CHANNEL_KINDS, TAG_C2E, TAG_UPLINK,
+                                UplinkChannel, uplink_channel)
+from repro.core.rounds import FedConfig
+from repro.core.strategies import RoundCtx, get_strategy
+from repro.utils.pytree import tree_broadcast_clients
+
+
+def _tree(seed=0, n=4):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"w": jax.random.normal(k1, (n, 6, 3)),
+            "b": jax.random.normal(k2, (n, 3))}
+
+
+# ---------------------------------------------------------------------------
+# channel properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), rnd=st.integers(0, 1000),
+       snr=st.floats(min_value=-10.0, max_value=40.0),
+       fading=st.booleans())
+def test_noiseless_channel_is_identity(seed, rnd, snr, fading):
+    ch = UplinkChannel(kind="noiseless", snr_db=snr, fading=fading,
+                       seed=seed)
+    t = _tree(seed % 7)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    assert ch.fade(t, rnd, ids, 4, TAG_UPLINK) is t
+    assert ch.corrupt(t, rnd, TAG_UPLINK) is t
+
+
+def test_uplink_channel_returns_none_for_noiseless():
+    assert uplink_channel(FedConfig(strategy="cc")) is None
+    ch = uplink_channel(FedConfig(strategy="cc", channel="aircomp",
+                                  channel_snr_db=7.0, channel_fading=True,
+                                  seed=3))
+    assert isinstance(ch, UplinkChannel)
+    assert (ch.kind, ch.snr_db, ch.fading, ch.seed) == ("aircomp", 7.0,
+                                                        True, 3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(snr=st.sampled_from([0.0, 10.0, 20.0]),
+       seed=st.integers(0, 2 ** 10), rnd=st.integers(0, 100))
+def test_aircomp_noise_power_tracks_snr(snr, seed, rnd):
+    """Measured noise power within 10% of 10^(−snr/10) × signal power.
+
+    A constant-ones tree has unit rms, so sigma² IS the relative noise
+    power; 40000 samples put the empirical variance well inside ±10%."""
+    ch = UplinkChannel(kind="aircomp", snr_db=snr, seed=seed)
+    t = {"a": jnp.ones((200, 100)), "b": jnp.ones((200, 100))}
+    out = ch.corrupt(t, rnd, TAG_UPLINK)
+    noise = np.concatenate([
+        (np.asarray(out[k]) - 1.0).ravel() for k in ("a", "b")])
+    measured = float((noise ** 2).mean())
+    expected = 10.0 ** (-snr / 10.0)
+    assert abs(measured - expected) <= 0.1 * expected, (measured, expected)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), rnd=st.integers(0, 1000),
+       tag=st.sampled_from([TAG_UPLINK, TAG_C2E]))
+def test_gains_are_cohort_invariant(seed, rnd, tag):
+    """Slicing a subset of clients out of the full draw == indexing —
+    sharded cohorts and edge shards see the flat executor's gains."""
+    ch = UplinkChannel(kind="aircomp", fading=True, seed=seed)
+    n = 16
+    full = ch.gains(rnd, jnp.arange(n, dtype=jnp.int32), n, tag)
+    sub = jnp.asarray([3, 7, 11], dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ch.gains(rnd, sub, n, tag)),
+        np.asarray(full)[np.asarray(sub)])
+    # unit mean power (Rayleigh with E[h²]=1) — loose sanity bound
+    assert 0.3 < float((full ** 2).mean()) < 3.0
+
+
+def test_gains_differ_across_rounds_and_tags():
+    ch = UplinkChannel(kind="aircomp", fading=True, seed=0)
+    ids = jnp.arange(8, dtype=jnp.int32)
+    g0 = np.asarray(ch.gains(0, ids, 8, TAG_UPLINK))
+    assert not np.array_equal(g0, np.asarray(ch.gains(1, ids, 8,
+                                                      TAG_UPLINK)))
+    assert not np.array_equal(g0, np.asarray(ch.gains(0, ids, 8, TAG_C2E)))
+
+
+def test_channel_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="channel kind"):
+        UplinkChannel(kind="quantum")
+    assert CHANNEL_KINDS == ("noiseless", "aircomp")
+
+
+# ---------------------------------------------------------------------------
+# FedDyn dual properties
+# ---------------------------------------------------------------------------
+
+
+def _ctx(sel, train, n):
+    z = {"w": jnp.zeros((n, 2))}
+    return RoundCtx(sel_mask=jnp.asarray(sel), train_mask=jnp.asarray(train),
+                    k_active=jnp.full((n,), 2, jnp.int32),
+                    round=jnp.asarray(0, jnp.int32), tau=100,
+                    stale_delta=z, trained_delta=z)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), mask_seed=st.integers(0, 2 ** 16))
+def test_feddyn_dual_update_is_mask_idempotent(seed, mask_seed):
+    """h_i ← h_i − α·Δ_i only where sel ∧ train; idle clients' dual rows
+    stay BIT-unchanged (the invariant that makes mid-span resume and the
+    cohort executors exact)."""
+    n = 6
+    strat = dataclasses.replace(get_strategy("feddyn"), alpha=0.3)
+    km, kd, kh = jax.random.split(jax.random.PRNGKey(seed), 3)
+    sel = jax.random.bernoulli(jax.random.PRNGKey(mask_seed), 0.5, (n,))
+    train = jax.random.bernoulli(kd, 0.5, (n,))
+    dual = {"w": jax.random.normal(km, (n, 2))}
+    delta = {"w": jax.random.normal(kh, (n, 2))}
+    state = {"dual": dual}
+    out = strat.update_extra_history(state, _ctx(sel, train, n), delta,
+                                     None, None)["dual"]
+    upd = np.asarray(sel & train)
+    got, before = np.asarray(out["w"]), np.asarray(dual["w"])
+    np.testing.assert_array_equal(got[~upd], before[~upd])
+    np.testing.assert_allclose(
+        got[upd], before[upd] - 0.3 * np.asarray(delta["w"])[upd],
+        rtol=1e-6)
+
+
+def test_feddyn_alpha_zero_is_inert():
+    """α=0 (the default wiring for non-feddyn runs): no dual gradient
+    correction and the dual roll is the identity carry."""
+    strat = get_strategy("feddyn")
+    assert strat.alpha == 0.0 and strat.prox_coeff() == 0.0
+    n = 3
+    dual = tree_broadcast_clients({"w": jnp.ones((2,))}, n)
+    state = {"dual": dual}
+    assert strat.local_dual(state) is None
+    out = strat.update_extra_history(
+        state, _ctx(jnp.ones(n, bool), jnp.ones(n, bool), n),
+        {"w": jnp.ones((n, 2))}, None, None)
+    assert out["dual"] is dual
+
+
+def test_feddyn_configure_threads_fed_fields():
+    fed = FedConfig(strategy="feddyn", feddyn_alpha=0.25)
+    strat = fed.resolve()
+    assert strat.name == "feddyn" and strat.alpha == 0.25
+    assert strat.prox_coeff() == 0.25
+    fedprox = FedConfig(strategy="fedprox", prox_mu=0.5).resolve()
+    assert fedprox.mu == 0.5 and fedprox.prox_coeff() == 0.5
+    # default configs resolve to the registered singletons (plugin pin)
+    assert FedConfig(strategy="feddyn").resolve() is get_strategy("feddyn")
+
+
+# ---------------------------------------------------------------------------
+# FedDyn checkpoint/resume: the dual rides the checkpoint bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_feddyn_checkpoint_resume_is_bit_identical(tmp_path):
+    from repro.api import ExperimentSpec, Session
+    spec = ExperimentSpec(
+        dataset="gaussian", n_samples=256, dim=8, n_classes=4, n_clients=4,
+        model="mlp", width=4, strategy="feddyn", feddyn_alpha=0.1,
+        local_steps=2, batch_size=16, lr=0.1, rounds=6, eval_every=2,
+        seed=0)
+    full = Session.from_spec(spec).run()
+    assert "dual" in full.state
+
+    part = Session.from_spec(spec, ckpt_dir=str(tmp_path))
+    part.run(3)
+    part.save()
+    resumed = Session.restore_from(str(tmp_path)).run()
+    assert resumed.metrics.series("test_acc") == \
+        full.metrics.series("test_acc")
+    for key in ("params", "dual", "deltas", "trained_ever"):
+        for a, b in zip(jax.tree.leaves(resumed.state[key]),
+                        jax.tree.leaves(full.state[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# spec v6 + async validation regressions
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rejects_channel_fields_without_aircomp():
+    from repro.api import ExperimentSpec
+    with pytest.raises(ValueError, match="aircomp"):
+        ExperimentSpec(channel_snr_db=5.0)
+    with pytest.raises(ValueError, match="aircomp"):
+        ExperimentSpec(channel_fading=True)
+    with pytest.raises(ValueError, match="channel"):
+        ExperimentSpec(channel="quantum")
+
+
+def test_spec_rejects_mismatched_strategy_hyperparams():
+    from repro.api import ExperimentSpec
+    with pytest.raises(ValueError, match="fedprox"):
+        ExperimentSpec(prox_mu=0.1)
+    with pytest.raises(ValueError, match="feddyn"):
+        ExperimentSpec(feddyn_alpha=0.1, strategy="cc")
+    with pytest.raises(ValueError, match=">= 0"):
+        ExperimentSpec(strategy="fedprox", prox_mu=-0.1)
+
+
+def test_async_cohort_smaller_than_buffer_deadlocks_eagerly():
+    """cohort_size < async_buffer can never fill the merge buffer — both
+    the spec and a directly-constructed Session reject it eagerly instead
+    of hanging the merge loop."""
+    from repro.api import ExperimentSpec
+    with pytest.raises(ValueError, match="deadlock"):
+        ExperimentSpec(executor="async", async_buffer=3, cohort_size=2)
+    # and below the spec layer (Session wiring)
+    from repro.api import Session
+    from repro.core.async_rounds import AsyncConfig
+    from repro.core.schedules import make_plan
+    from repro.data.federated import build_federated
+    from repro.data.partition import partition_gamma
+    from repro.data.synthetic import make_dataset, train_test_split
+    from repro.models.simple import make_classifier
+    ds = make_dataset("gaussian", n=64, dim=8, n_classes=4, seed=0)
+    tr, _ = train_test_split(ds)
+    fd = build_federated(tr, partition_gamma(tr, 4, gamma=0.5, seed=0))
+    model = make_classifier("mlp", input_shape=(8,), n_classes=4, width=4)
+    with pytest.raises(ValueError, match="deadlock"):
+        Session(model, fd,
+                FedConfig(strategy="cc", cohort_size=2),
+                make_plan("full", np.ones(4), 2), executor="async",
+                async_cfg=AsyncConfig(buffer_size=3))
+
+
+def test_async_cohort_size_thins_arrivals():
+    """executor='async' + cohort_size: only sampled cohort members may
+    dispatch each round, so realized arrivals shrink vs full async."""
+    from repro.api import ExperimentSpec, Session
+    base = ExperimentSpec(
+        dataset="gaussian", n_samples=256, dim=8, n_classes=4, n_clients=4,
+        model="mlp", width=4, strategy="cc", local_steps=2, batch_size=16,
+        rounds=6, eval_every=6, seed=0, executor="async", async_buffer=2,
+        async_latency=1.0)
+    full = Session.from_spec(base).run()
+    thin = Session.from_spec(base.replace(cohort_size=2)).run()
+    assert thin.staleness_summary()["arrivals"] < \
+        full.staleness_summary()["arrivals"]

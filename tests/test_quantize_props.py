@@ -72,3 +72,34 @@ def test_masked_mean_aggregation_within_analytic_bound(n, p, seed, scale,
     approx = (w[:, None] * np.asarray(back)).sum(0) / m
     bound = (w * np.asarray(scales)).sum() / m * 0.5 * _SLACK
     assert (np.abs(exact - approx) <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# quantize_tree degenerate-leaf regressions: empty, 0-d and all-zero
+# leaves must round-trip (jnp.max over zero elements raises, even jitted)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_tree_handles_empty_leaves():
+    from repro.core.compress import dequantize_tree, quantize_tree
+    tree = {"w": jnp.ones((3, 2)), "empty": jnp.zeros((0, 4))}
+    q = quantize_tree(tree)
+    assert q.payload["empty"].shape == (0, 4)
+    assert q.payload["empty"].dtype == jnp.int8
+    assert float(q.scales["empty"]) == 1.0
+    back = dequantize_tree(q)
+    assert back["empty"].shape == (0, 4)
+    np.testing.assert_allclose(np.asarray(back["w"]), 1.0, atol=1e-2)
+
+    jq = jax.jit(quantize_tree)(tree)     # the jnp.max guard is static —
+    assert jq.payload["empty"].shape == (0, 4)   # safe under jit too
+
+
+def test_quantize_tree_handles_scalar_and_zero_leaves():
+    from repro.core.compress import dequantize_tree, quantize_tree
+    tree = {"s": jnp.asarray(0.5), "z": jnp.zeros((4, 4))}
+    back = dequantize_tree(quantize_tree(tree))
+    np.testing.assert_allclose(float(back["s"]), 0.5, atol=0.5 / 127)
+    # all-zero leaves dequantize to EXACT zeros (scale floor never
+    # manufactures a payload)
+    assert not np.asarray(back["z"]).any()

@@ -1,0 +1,86 @@
+"""Spec schema-version compatibility pins.
+
+Every committed ``examples/specs/vN.json`` must keep loading after the
+v6 bump — old spec files are a public surface — and ``from_dict`` must
+reject version/field mismatches with the precise "introduced in spec vY"
+message instead of an opaque constructor TypeError.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.api.spec import SPEC_VERSION, _FIELD_INTRO, ExperimentSpec
+
+_SPEC_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples", "specs")
+
+
+def _example_paths():
+    paths = sorted(glob.glob(os.path.join(_SPEC_DIR, "v*.json")))
+    assert len(paths) >= 6, f"missing committed example specs in {_SPEC_DIR}"
+    return paths
+
+
+@pytest.mark.parametrize("path", _example_paths(),
+                         ids=[os.path.basename(p) for p in _example_paths()])
+def test_committed_example_specs_round_trip(path):
+    """Load → to_dict → from_dict is a fixed point for every committed
+    version example (v1 through the current version)."""
+    with open(path) as f:
+        d = json.load(f)
+    spec = ExperimentSpec.from_dict(d)
+    again = ExperimentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    # declared fields survive the round trip at their file values
+    for k, v in d.items():
+        if k == "spec_version":
+            continue
+        got = getattr(spec, k)
+        got = list(got) if isinstance(got, tuple) else got
+        assert got == v, f"{os.path.basename(path)}:{k}"
+
+
+def test_from_dict_rejects_future_versions():
+    with pytest.raises(ValueError, match="newer than supported"):
+        ExperimentSpec.from_dict({"spec_version": SPEC_VERSION + 1})
+    # unknown fields riding a future version are named in the error
+    with pytest.raises(ValueError, match="warp_factor"):
+        ExperimentSpec.from_dict({"spec_version": SPEC_VERSION + 1,
+                                  "warp_factor": 9})
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown spec fields"):
+        ExperimentSpec.from_dict({"no_such_field": 1})
+
+
+def test_from_dict_names_the_introducing_version():
+    """A non-default v6 field in a spec declaring an older version gets
+    the 'introduced in spec v6' message."""
+    with pytest.raises(ValueError,
+                       match="'channel' was introduced in spec v6"):
+        ExperimentSpec.from_dict({"spec_version": 5, "channel": "aircomp"})
+    with pytest.raises(ValueError,
+                       match="'async_buffer' was introduced in spec v5"):
+        ExperimentSpec.from_dict({"spec_version": 4, "executor": "async",
+                                  "async_buffer": 2})
+
+
+def test_from_dict_tolerates_late_fields_at_defaults():
+    """A newer writer's round-trip (all fields present, defaults intact)
+    loads under an older declared version — default == absent."""
+    d = ExperimentSpec().to_dict()
+    d["spec_version"] = 1
+    assert ExperimentSpec.from_dict(d) == ExperimentSpec()
+
+
+def test_field_intro_covers_exactly_the_post_v1_fields():
+    """Every field the map names exists on the dataclass, and the map's
+    version range is [2, SPEC_VERSION]."""
+    import dataclasses
+    names = {f.name for f in dataclasses.fields(ExperimentSpec)}
+    assert set(_FIELD_INTRO) <= names
+    assert min(_FIELD_INTRO.values()) == 2
+    assert max(_FIELD_INTRO.values()) == SPEC_VERSION
