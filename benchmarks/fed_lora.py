@@ -1,0 +1,214 @@
+"""Federated LoRA: adapter-history memory + executor overhead.
+
+Two measurements in one harness (ISSUE 10 tentpole acceptance):
+
+* **adapter history scaling** — CC estimation replay on a ≥ 10⁶-param
+  zoo decoder with rank-8 adapters through the async executor's int8
+  :class:`repro.core.history_store.HistoryStore`. The store carries the
+  ADAPTER subtree, O(N·r·d); the committed number is its carry bytes as
+  a fraction of the dense N·P f32 history a non-LoRA run would pay —
+  the acceptance bound is ≤ 5% (gated, exit 1). Also reports realized
+  client-rounds/s on the big model.
+* **executor overhead** — a rank-8 LoRA round on the simple MLP against
+  the dense MLP round through the same scan executor: the adapter
+  reconstruction (einsum + functional set) runs inside every local
+  step, so its cost shows up directly in the round time.
+  ``--max-overhead`` turns the ratio into a regression budget (the CI
+  smoke gates at 1.5x).
+
+Emits machine-readable results to ``BENCH_fed_lora.json`` (``--json`` to
+change the path, empty string to disable).
+
+    PYTHONPATH=src python benchmarks/fed_lora.py [--clients 8]
+        [--rounds 6] [--reps 2] [--width 32] [--lora-rank 8]
+        [--mlp-width 64] [--max-overhead 1.5]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_rounds import (AsyncConfig, init_async_carry,
+                                     make_async_span_runner)
+from repro.core.history_store import HistoryStore
+from repro.core.rounds import FedConfig, init_fed_state, make_span_runner
+from repro.core.schedules import make_plan
+from repro.data.federated import build_federated
+from repro.data.partition import budget_law, partition_gamma
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.lora import lora_classifier, lora_report
+from repro.models.simple import make_classifier
+from repro.models.zoo import make_zoo_classifier
+from repro.system.devices import make_profile, simulate_arrivals
+
+
+def _block(x):
+    jax.block_until_ready(jax.tree.leaves(x)[0])
+
+
+def _scenario(n, *, dim, n_classes, seed=0):
+    ds = make_dataset("gaussian", n=1024, dim=dim, n_classes=n_classes,
+                      seed=seed)
+    tr, _ = train_test_split(ds, seed=seed)
+    return build_federated(tr, partition_gamma(tr, n, gamma=0.5, seed=seed))
+
+
+def _bench_adapter_history(args):
+    """CC replay on the zoo decoder: int8 adapter store vs dense N·P."""
+    n = args.clients
+    base = make_zoo_classifier("decoder", input_shape=(16,), n_classes=8,
+                               width=args.width)
+    model = lora_classifier(base, jax.random.PRNGKey(0), args.lora_rank)
+    rep = lora_report(base.init(jax.random.PRNGKey(0)),
+                      model.init(jax.random.PRNGKey(1)))
+    print(f"decoder width={args.width}: P_dense={rep['p_dense']} "
+          f"P_adapter={rep['p_trainable']} "
+          f"({rep['trainable_frac'] * 100:.2f}% trainable)")
+
+    fd = _scenario(n, dim=16, n_classes=8)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=16, lr=0.1)
+    cfg = AsyncConfig(history_store="int8")
+    p = budget_law(n, beta=2)
+    plan = make_plan("adhoc", p, args.rounds, seed=0)
+    profile = make_profile("budget", p, seed=0)
+    sched_np = simulate_arrivals(profile, np.asarray(plan.selection),
+                                 buffer_size=cfg.buffer_size,
+                                 latency=cfg.latency, jitter=cfg.jitter)
+    sched = tuple(jnp.asarray(x) for x in sched_np)
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+    train = jnp.asarray(plan.training)
+    runner = make_async_span_runner(model, fd, fed, cfg)
+
+    def fresh():
+        st = init_fed_state(jax.random.PRNGKey(0), model, n)
+        return init_async_carry(st, st["params"], n, cfg,
+                                needs_stale=fed.resolve().needs_stale)
+
+    state = runner(fresh(), train, k, sched)
+    _block(state)
+    times = []
+    for _ in range(args.reps):
+        s = fresh()
+        t0 = time.perf_counter()
+        _block(runner(s, train, k, sched))
+        times.append(time.perf_counter() - t0)
+    best = min(times)
+    arrivals = int(sched_np.deliver.sum())
+
+    hist_bytes = HistoryStore.carry_bytes(state["deltas"])
+    dense_bytes = 4 * n * rep["p_dense"]      # the N·P f32 history LoRA
+    ratio = hist_bytes / dense_bytes          # federation never pays
+    print(f"int8 adapter history:      {hist_bytes / 1e3:8.1f} kB "
+          f"(dense N*P f32 would be {dense_bytes / 1e6:.1f} MB, "
+          f"ratio {ratio * 100:.2f}%)")
+    print(f"async span:                {best * 1e3:8.1f} ms "
+          f"({arrivals / best:9.1f} client-rounds/s)")
+    print(f"csv,fed_lora,history,{hist_bytes},{ratio:.5f}")
+    return {"p_dense": rep["p_dense"], "p_trainable": rep["p_trainable"],
+            "trainable_frac": rep["trainable_frac"],
+            "lora_rank": args.lora_rank,
+            "history_bytes_int8": hist_bytes,
+            "history_bytes_dense_f32": dense_bytes,
+            "history_bytes_ratio": ratio,
+            "span_s": best, "arrivals": arrivals,
+            "client_rounds_per_second": arrivals / best}
+
+
+def _bench_overhead(args):
+    """Rank-8 LoRA MLP round vs the dense MLP round (scan executor)."""
+    n = args.clients
+    fd = _scenario(n, dim=16, n_classes=8, seed=1)
+    fed = FedConfig(strategy="cc", local_steps=args.local_steps,
+                    batch_size=16, lr=0.1)
+    plan = make_plan("adhoc", budget_law(n, beta=2), args.rounds, seed=1)
+    sel, train = jnp.asarray(plan.selection), jnp.asarray(plan.training)
+    k = jnp.full((n,), fed.local_steps, jnp.int32)
+
+    dense = make_classifier("mlp", input_shape=(16,), n_classes=8,
+                            width=args.mlp_width)
+    lora = lora_classifier(dense, jax.random.PRNGKey(0), args.lora_rank)
+    cells = {}
+    for label, model in (("dense", dense), ("lora", lora)):
+        runner = make_span_runner(model, fd, fed)
+        _block(runner(init_fed_state(jax.random.PRNGKey(0), model, n),
+                      sel, train, k))
+        times = []
+        for _ in range(args.reps):
+            s = init_fed_state(jax.random.PRNGKey(0), model, n)
+            t0 = time.perf_counter()
+            _block(runner(s, sel, train, k))
+            times.append(time.perf_counter() - t0)
+        cells[label] = min(times)
+        print(f"mlp {label:5s} round:           "
+              f"{cells[label] / args.rounds * 1e3:8.2f} ms/round")
+    overhead = cells["lora"] / cells["dense"]
+    print(f"lora overhead vs dense:    {overhead:8.2f}x")
+    print(f"csv,fed_lora,overhead,{cells['lora'] * 1e6:.0f},{overhead:.3f}")
+    return {"mlp_width": args.mlp_width, "dense_s": cells["dense"],
+            "lora_s": cells["lora"], "overhead_vs_dense": overhead}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--width", type=int, default=32,
+                    help="zoo decoder width (d_model = 8*width; 32 -> "
+                         "~1.4M dense params)")
+    ap.add_argument("--lora-rank", type=int, default=8)
+    ap.add_argument("--mlp-width", type=int, default=64,
+                    help="width of the overhead cell's MLP")
+    ap.add_argument("--max-overhead", type=float, default=0.0,
+                    help="fail (exit 1) if the LoRA MLP round exceeds "
+                         "this multiple of the dense round (0 = report "
+                         "only)")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_fed_lora.json"),
+        help="write machine-readable results here ('' disables)")
+    args = ap.parse_args()
+
+    print(f"clients={args.clients} rounds={args.rounds} "
+          f"devices={len(jax.devices())} (best of {args.reps})")
+    hist = _bench_adapter_history(args)
+    over = _bench_overhead(args)
+
+    if args.json:
+        payload = {
+            "bench": "fed_lora",
+            "config": {"clients": args.clients, "rounds": args.rounds,
+                       "local_steps": args.local_steps, "reps": args.reps,
+                       "width": args.width, "lora_rank": args.lora_rank,
+                       "devices": len(jax.devices())},
+            "adapter_history": hist,
+            "overhead": over,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    # the acceptance bound is unconditional: rank-8 adapters on the 1M+
+    # decoder must keep the int8 history under 5% of dense N·P f32
+    if hist["history_bytes_ratio"] > 0.05:
+        print(f"FAIL: history ratio {hist['history_bytes_ratio'] * 100:.2f}%"
+              " exceeds the 5% acceptance bound")
+        return 1
+    if args.max_overhead and over["overhead_vs_dense"] > args.max_overhead:
+        print(f"FAIL: lora overhead {over['overhead_vs_dense']:.2f}x "
+              f"exceeds budget {args.max_overhead:.2f}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -124,7 +124,8 @@ def _load_spec(path: str, sets: list[str],
                history_store: str | None = None,
                strategy: str | None = None,
                channel: str | None = None,
-               snr_db: float | None = None) -> ExperimentSpec:
+               snr_db: float | None = None,
+               executor: str | None = None) -> ExperimentSpec:
     spec = ExperimentSpec.load(path)
     overrides = _parse_sets(sets)
     if policy:
@@ -151,6 +152,8 @@ def _load_spec(path: str, sets: list[str],
         overrides["channel"] = channel
     if snr_db is not None:
         overrides["channel_snr_db"] = snr_db
+    if executor:
+        overrides["executor"] = executor
     return spec.replace(**overrides) if overrides else spec
 
 
@@ -180,7 +183,7 @@ def cmd_run(args) -> int:
                       staleness_decay=args.staleness_decay,
                       history_store=args.history_store,
                       strategy=args.strategy, channel=args.channel,
-                      snr_db=args.snr_db)
+                      snr_db=args.snr_db, executor=args.executor)
     callbacks = [] if args.quiet else [VerboseLogger()]
     if args.save_every and not args.ckpt_dir:
         raise SystemExit("--save-every needs --ckpt-dir (nowhere to save)")
@@ -223,7 +226,7 @@ def cmd_sweep(args) -> int:
                       staleness_decay=args.staleness_decay,
                       history_store=args.history_store,
                       strategy=args.strategy, channel=args.channel,
-                      snr_db=args.snr_db)
+                      snr_db=args.snr_db, executor=args.executor)
     grid = _parse_grids(args.grid)
     result = run_sweep(spec, grid, verbose=not args.quiet)
     _dump(result, args.out)
@@ -232,14 +235,23 @@ def cmd_sweep(args) -> int:
 
 
 def _add_policy_flags(p: argparse.ArgumentParser) -> None:
+    # every choices= below is derived from the owning registry — a newly
+    # registered strategy/executor/kind is reachable from the CLI without
+    # touching this file (pinned by tests/test_cli_registries.py)
     from repro.core.budget import POLICY_KINDS
     from repro.core.channel import CHANNEL_KINDS
     from repro.core.hierarchy import TOPOLOGY_KINDS
+    from repro.core.history_store import STORE_KINDS
+    from repro.core.rounds import COMPRESS_KINDS, EXECUTORS
     from repro.core.strategies import available_strategies
+    from repro.system.devices import PROFILE_KINDS
     p.add_argument("--strategy", default=None,
                    choices=available_strategies(),
                    help="aggregation strategy (shorthand for --set "
                         "strategy=...; choices come from the registry)")
+    p.add_argument("--executor", default=None, choices=EXECUTORS,
+                   help="round executor (shorthand for --set "
+                        "executor=...)")
     p.add_argument("--channel", default=None, choices=CHANNEL_KINDS,
                    help="uplink channel model (shorthand for --set "
                         "channel=...; aircomp adds AWGN at --snr-db)")
@@ -249,7 +261,7 @@ def _add_policy_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--policy", default=None, choices=POLICY_KINDS,
                    help="budget policy (shorthand for --set policy=...)")
     p.add_argument("--device-profile", default=None,
-                   choices=("budget", "uniform"),
+                   choices=PROFILE_KINDS,
                    help="device runtime (shorthand for --set "
                         "device_profile=...)")
     p.add_argument("--topology", default=None, choices=TOPOLOGY_KINDS,
@@ -262,7 +274,7 @@ def _add_policy_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--edge-period", type=int, default=None,
                    help="intra-edge rounds per server sync (shorthand "
                         "for --set edge_period=...)")
-    p.add_argument("--compress", default=None, choices=("none", "int8"),
+    p.add_argument("--compress", default=None, choices=COMPRESS_KINDS,
                    help="Δ-history wire/memory format (shorthand for "
                         "--set compress=...; int8 needs "
                         "--set use_fused=true)")
@@ -273,7 +285,7 @@ def _add_policy_flags(p: argparse.ArgumentParser) -> None:
                    help="γ of the staleness merge weight w(s) (shorthand "
                         "for --set staleness_decay=...)")
     p.add_argument("--history-store", default=None,
-                   choices=("dense", "int8"),
+                   choices=STORE_KINDS,
                    help="async Δ-history carry layout (shorthand for "
                         "--set history_store=...)")
 

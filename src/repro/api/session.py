@@ -39,7 +39,7 @@ from repro.checkpoint.store import CheckpointManager
 from repro.core.async_rounds import AsyncConfig, make_async_span_runner
 from repro.core.budget import PrecompiledPolicy
 from repro.core.evaluation import evaluate
-from repro.core.rounds import (FedConfig, init_fed_state,
+from repro.core.rounds import (EXECUTORS, FedConfig, init_fed_state,
                                make_hierarchical_span_runner,
                                make_policy_round_fn,
                                make_policy_span_runner,
@@ -74,9 +74,9 @@ class Session:
                  ckpt_dir: str | None = None, keep: int = 3,
                  spec=None, policy=None, profile=None, topology=None,
                  async_cfg=None):
-        if executor not in ("scan", "python", "sharded", "hierarchical",
-                            "async"):
-            raise ValueError(f"unknown executor {executor!r}")
+        if executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {executor!r}; "
+                             f"available: {EXECUTORS}")
         if executor in ("sharded", "hierarchical", "async") and use_fused:
             raise ValueError(f"use_fused is not supported by the "
                              f"{executor} executor; pick one fast path")

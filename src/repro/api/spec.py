@@ -27,15 +27,17 @@ from repro.core.budget import POLICY_KINDS, BudgetPolicy, make_policy
 from repro.core.channel import CHANNEL_KINDS
 from repro.core.hierarchy import TOPOLOGY_KINDS, EdgeTopology
 from repro.core.history_store import STORE_KINDS
-from repro.core.rounds import FedConfig
+from repro.core.rounds import COMPRESS_KINDS, EXECUTORS, FedConfig
 from repro.core.schedules import Plan, make_plan
 from repro.data.federated import FederatedData, build_federated
 from repro.data.partition import (budget_law, partition_classes,
                                   partition_gamma, two_group_budget)
 from repro.data.synthetic import make_dataset, train_test_split
+from repro.models.lora import lora_classifier
 from repro.models.simple import Classifier, make_classifier
-from repro.system.devices import (DeviceProfile, edge_scaled_profile,
-                                  make_profile)
+from repro.models.zoo import ZOO_KINDS, make_zoo_classifier
+from repro.system.devices import (PROFILE_KINDS, DeviceProfile,
+                                  edge_scaled_profile, make_profile)
 
 #: schema version embedded in serialized specs; bump on breaking changes
 #: (v2: runtime budget policies + device-profile fields; v3: two-tier
@@ -44,8 +46,9 @@ from repro.system.devices import (DeviceProfile, edge_scaled_profile,
 #: async_buffer/staleness_decay/staleness_schedule/async_latency/
 #: async_jitter/history_store; v6: fedprox/feddyn hyperparameters +
 #: uplink channel — prox_mu/feddyn_alpha/channel/channel_snr_db/
-#: channel_fading)
-SPEC_VERSION = 6
+#: channel_fading; v7: federated LoRA over the model zoo —
+#: lora_rank/freeze_base + the decoder|moe|xlstm model kinds)
+SPEC_VERSION = 7
 
 #: first spec version each non-v1 field appeared in — ``from_dict`` uses
 #: this to reject a field that postdates the version a spec declares with
@@ -62,17 +65,24 @@ _FIELD_INTRO = {
                       "async_jitter", "history_store")},
     **{f: 6 for f in ("channel", "channel_snr_db", "channel_fading",
                       "prox_mu", "feddyn_alpha")},
+    **{f: 7 for f in ("lora_rank", "freeze_base")},
 }
 
-_COMPRESS = ("none", "int8")
+# choice tables: every registry-backed one is imported from its registry so
+# registering a new kind there makes it reachable here (and in the CLI) —
+# never restate those literals
+_COMPRESS = COMPRESS_KINDS
+#: "simple" is an alias for "mlp" — the spec-v7 surface names the simple
+#: (dense-federable) family in contrast to the zoo kinds
+_SIMPLE_MODELS = ("mlp", "cnn", "resnet18", "simple")
 
 _DATASETS = ("gaussian", "teacher", "image")
 _PARTITIONS = ("gamma", "classes")
 _BUDGETS = ("power", "two_group", "uniform", "explicit")
-_MODELS = ("mlp", "cnn", "resnet18")
+_MODELS = _SIMPLE_MODELS + ZOO_KINDS
 _SCHEDULES = ("adhoc", "round_robin", "sync", "dropout", "full")
-_EXECUTORS = ("scan", "python", "sharded", "hierarchical", "async")
-_DEVICE_PROFILES = ("budget", "uniform")
+_EXECUTORS = EXECUTORS
+_DEVICE_PROFILES = PROFILE_KINDS
 _TOPOLOGIES = ("flat",) + TOPOLOGY_KINDS
 
 
@@ -119,8 +129,16 @@ class ExperimentSpec:
     p: tuple[float, ...] | None = None   # explicit budgets (budget="explicit")
 
     # ---- model ----------------------------------------------------------
-    model: str = "mlp"             # mlp | cnn | resnet18
+    model: str = "mlp"    # mlp | cnn | resnet18 | decoder | moe | xlstm
     width: int = 8
+    #: LoRA rank r: 0 trains the model densely (simple models only); r >= 1
+    #: wraps the model with rank-r adapters (models/lora.py) so the
+    #: federated trainable subtree — and with it every executor's Δ history
+    #: — is O(r·d) instead of O(P). Required (>= 1) for the zoo kinds.
+    lora_rank: int = 0
+    #: with LoRA: freeze everything but the adapters (True, the default) or
+    #: additionally train the non-adapted leaves (biases/norms/embeddings)
+    freeze_base: bool = True
 
     # ---- federated config (mirrors FedConfig) ---------------------------
     strategy: str = "cc"
@@ -196,6 +214,16 @@ class ExperimentSpec:
         _check("partition", self.partition, _PARTITIONS)
         _check("budget", self.budget, _BUDGETS)
         _check("model", self.model, _MODELS)
+        if self.lora_rank < 0:
+            raise ValueError(f"lora_rank must be >= 0, got {self.lora_rank}")
+        if self.model in ZOO_KINDS and self.lora_rank < 1:
+            raise ValueError(
+                f"model={self.model!r} is a zoo stack; federating it "
+                "densely is exactly the O(N·P) history blow-up LoRA "
+                "avoids — set lora_rank >= 1")
+        if not self.freeze_base and self.lora_rank == 0:
+            raise ValueError("freeze_base=False only applies to LoRA runs "
+                             "(lora_rank >= 1)")
         _check("schedule", self.schedule, _SCHEDULES)
         _check("executor", self.executor, _EXECUTORS)
         _check("policy", self.policy, POLICY_KINDS)
@@ -439,8 +467,24 @@ class ExperimentSpec:
                                       self.classes_per_client,
                                       seed=self.seed)
         data = build_federated(train, parts)
-        model = make_classifier(self.model, input_shape=train.x.shape[1:],
-                                n_classes=self.n_classes, width=self.width)
+        if self.model in ZOO_KINDS:
+            model = make_zoo_classifier(
+                self.model, input_shape=train.x.shape[1:],
+                n_classes=self.n_classes, width=self.width)
+        else:
+            kind = "mlp" if self.model == "simple" else self.model
+            model = make_classifier(
+                kind, input_shape=train.x.shape[1:],
+                n_classes=self.n_classes, width=self.width)
+        if self.lora_rank > 0:
+            import jax
+            # base weights come from a fixed fold of the spec seed, so the
+            # frozen base is reproducible from the spec alone (the engine's
+            # model.init(PRNGKey(seed)) then draws only the adapters)
+            base_rng = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                          0x10ad)
+            model = lora_classifier(model, base_rng, self.lora_rank,
+                                    freeze_base=self.freeze_base)
         p = self.budgets()
         plan = make_plan(self.schedule, p, self.rounds,
                          participation_ratio=self.participation,

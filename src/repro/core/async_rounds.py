@@ -149,9 +149,7 @@ def init_async_carry(state: PyTree, params: PyTree, n_clients: int,
     }
     if cfg.history_store == "int8":
         flat, _ = tree_ravel_clients(zeros)
-        from repro.core.history_store import padded_width
-        store = HistoryStore(n_clients, padded_width(flat.shape[1]),
-                             kind="int8")
+        store = HistoryStore.for_flat(n_clients, flat.shape[1], kind="int8")
         state["deltas"] = store.init()
         if not needs_stale:
             state.pop("prev_local", None)
@@ -208,8 +206,8 @@ def make_async_round_body(model: Classifier, data: FederatedData,
               and set(state["deltas"]) == {"payload", "scales"})
         if q8:
             store = HistoryStore(n, state["deltas"]["payload"].shape[1],
-                                 kind="int8")
-            hist_deltas = unravel_clients(store.read(state["deltas"])[:, :p])
+                                 kind="int8", logical_width=p)
+            hist_deltas = unravel_clients(store.read_logical(state["deltas"]))
         else:
             store = None
             hist_deltas = state["deltas"]
@@ -249,10 +247,8 @@ def make_async_round_body(model: Classifier, data: FederatedData,
             new_deltas = deltas_tree
         else:
             flat_new, _ = tree_ravel_clients(deltas_tree)
-            pad = store.width - p
-            if pad:
-                flat_new = jnp.pad(flat_new, ((0, 0), (0, pad)))
-            new_deltas = store.write(state["deltas"], deliver, flat_new)
+            new_deltas = store.write(state["deltas"], deliver,
+                                     store.pad_rows(flat_new))
         trained_ever = state["trained_ever"] | (deliver & t_mask)
 
         # ---- 4. buffered merge (only the K-arrival boundary pays) ------

@@ -49,6 +49,12 @@ class HistoryStore:
     n_clients: int
     width: int                 # padded flat parameter count P
     kind: str = "dense"
+    #: pre-padding flat parameter count; ``None`` means width itself. Set by
+    #: :meth:`for_flat` so round bodies can hand the store un-padded rows
+    #: (:meth:`pad_rows`) and read back exactly the logical columns
+    #: (:meth:`read_logical`) — e.g. the O(r·d) LoRA adapter subtree, whose
+    #: flat width is almost never a TILE multiple.
+    logical_width: int | None = None
 
     def __post_init__(self):
         if self.kind not in STORE_KINDS:
@@ -58,6 +64,35 @@ class HistoryStore:
             raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
         if self.width < 1:
             raise ValueError(f"width must be >= 1, got {self.width}")
+        lw = self.logical_width
+        if lw is not None and not 1 <= lw <= self.width:
+            raise ValueError(f"logical_width must be in [1, width="
+                             f"{self.width}], got {lw}")
+
+    @classmethod
+    def for_flat(cls, n_clients: int, p: int, kind: str = "dense",
+                 tile: int = TILE) -> "HistoryStore":
+        """Store for an un-padded flat parameter count ``p`` — the width is
+        tile-padded, ``p`` is remembered as the logical width."""
+        return cls(n_clients, padded_width(p, tile), kind, logical_width=p)
+
+    @property
+    def p_logical(self) -> int:
+        return self.width if self.logical_width is None else \
+            self.logical_width
+
+    def pad_rows(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Zero-pad (..., p_logical) rows to the store width. The padded
+        tail quantizes to payload 0 under the per-row symmetric scheme, so
+        it stays exactly zero through every round trip (pinned in
+        ``tests/test_history_store_padding.py``)."""
+        pad = self.width - rows.shape[-1]
+        if pad < 0:
+            raise ValueError(f"rows wider ({rows.shape[-1]}) than the store "
+                             f"({self.width})")
+        if pad == 0:
+            return rows
+        return jnp.pad(rows, ((0, 0),) * (rows.ndim - 1) + ((0, pad),))
 
     # ---- carry lifecycle ------------------------------------------------
 
@@ -93,6 +128,10 @@ class HistoryStore:
             return dequantize_rows(carry["payload"], carry["scales"])
         from repro.kernels.ops import q8_gather_rows
         return q8_gather_rows(carry["payload"], carry["scales"], idx)
+
+    def read_logical(self, carry: dict, idx=None) -> jnp.ndarray:
+        """:meth:`read` cropped to the logical (pre-padding) columns."""
+        return self.read(carry, idx)[:, :self.p_logical]
 
     def write(self, carry: dict, mask, rows: jnp.ndarray) -> dict:
         """Masked full-N write: rows where ``mask`` take the new values

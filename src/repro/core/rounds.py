@@ -84,6 +84,14 @@ from repro.utils.pytree import (
 
 _FUSED_PAD = 512               # flat params padded to a tile-friendly multiple
 
+#: every registered round executor — the Session dispatch table and the
+#: spec/CLI ``choices`` derive from this tuple, so adding an executor here
+#: (plus its Session branch) makes it reachable everywhere at once
+EXECUTORS = ("scan", "python", "sharded", "hierarchical", "async")
+
+#: Δ-history wire/storage formats accepted by ``FedConfig.compress``
+COMPRESS_KINDS = ("none", "int8")
+
 #: mesh axis name the sharded executor splits the client dimension over
 CLIENT_AXIS = "clients"
 
@@ -129,9 +137,9 @@ class FedConfig:
         if self.cohort_size is not None and self.cohort_size < 1:
             raise ValueError(
                 f"cohort_size must be >= 1, got {self.cohort_size}")
-        if self.compress not in ("none", "int8"):
+        if self.compress not in COMPRESS_KINDS:
             raise ValueError(
-                f"compress must be one of ('none', 'int8'), got "
+                f"compress must be one of {COMPRESS_KINDS}, got "
                 f"{self.compress!r}")
         if self.compress == "int8" and not strategy.fused_capable:
             raise ValueError(
@@ -227,9 +235,9 @@ def init_fed_state(rng, model: Classifier, n_clients: int, *,
     }
     if strategy is not None:
         state.update(strategy.init_extra_history(params, n_clients))
-    if compress not in ("none", "int8"):
+    if compress not in COMPRESS_KINDS:
         raise ValueError(
-            f"compress must be one of ('none', 'int8'), got {compress!r}")
+            f"compress must be one of {COMPRESS_KINDS}, got {compress!r}")
     if compress == "int8":
         from repro.core.compress import quantize_rows
         flat, _ = tree_ravel(params)

@@ -46,6 +46,37 @@ def make_client_mesh(n_shards: int | None = None):
     return jax.make_mesh((n,), ("clients",))
 
 
+def make_fed_mesh(axes: tuple[str, ...] = ("clients", "model"),
+                 shape: tuple[int, ...] | None = None):
+    """2-D federated mesh composing the client axis with model-axis tensor
+    sharding.
+
+    The sharded executor ``shard_map``'s the stacked client dimension over
+    ``"clients"`` exactly as on the 1-D mesh (specs that never name
+    ``"model"`` are simply replicated over it), while
+    :func:`repro.sharding.rules.params_pspecs` with
+    :func:`repro.sharding.rules.make_fed_rules` places the rank dim of
+    stacked per-client LoRA adapters — logical axis ``"lora"`` — on
+    ``"model"``. Default shape puts every visible device on the clients
+    axis; pass e.g. ``shape=(2, 2)`` on a 4-device host for a genuinely
+    2-D layout.
+    """
+    if "clients" not in axes:
+        raise ValueError(f"a federated mesh needs a 'clients' axis, "
+                         f"got {axes}")
+    ndev = len(jax.devices())
+    if shape is None:
+        shape = tuple(ndev if a == "clients" else 1 for a in axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} does not match axes {axes}")
+    n = 1
+    for s in shape:
+        n *= s
+    if n < 1 or n > ndev:
+        raise ValueError(f"mesh size {n} must be in [1, {ndev}]")
+    return jax.make_mesh(shape, axes)
+
+
 def best_client_shards(cohort_size: int, max_shards: int | None = None) -> int:
     """Largest device count ≤ ``max_shards`` that divides the cohort —
     ``shard_map`` needs the cohort split evenly, so e.g. a 6-client cohort

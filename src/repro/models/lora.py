@@ -1,0 +1,198 @@
+"""LoRA adapters over the model zoo — the federated trainable subtree.
+
+``lora_classifier`` wraps any :class:`~repro.models.simple.Classifier` so
+that its *trainable* parameter tree contains only rank-r adapter factors
+(plus, optionally, the small non-adapted leaves): the base weights are
+materialized once from a fixed rng at wrap time and closed over. Because the
+federated engine only ever sees ``model.init``/``model.apply``, every
+executor, the int8 :class:`~repro.core.history_store.HistoryStore` and the
+CC estimation replay automatically operate on the O(r·d) adapter subtree
+instead of the O(P) dense tree — no masking inside ``core/rounds.py``.
+
+Adapters live in a *flat* dict keyed by the '/'-joined path of the adapted
+leaf in the base tree (list indices become string segments, matching
+``tree_map_with_path``), so the trainable tree is plain nested dicts even
+when the base tree holds lists of scanned segments::
+
+    {"lora": {"segments/0/0/mixer/wq": {"lora_a": A, "lora_b": B}, ...},
+     "base": {"final_norm/scale": s, ...}}          # freeze_base=False only
+
+The effective weight is ``W + (alpha/r) * A @ B`` contracted over the last
+two dims (``einsum("...ir,...ro->...io")``), so stacked leaves — scanned
+layer repeats, MoE experts — adapt per leading index. ``B`` is
+zero-initialized: the round-0 model is exactly the frozen base.
+
+The leaf names ``lora_a``/``lora_b`` are registered in
+``sharding/rules.py::_PARAM_AXES`` so ``params_pspecs`` places the rank dim
+on the ``lora`` logical axis (→ ``model`` mesh axis) and, with
+``client_axis=True``, the stacked per-client adapters shard over
+``clients`` — the 2-D ``("clients", "model")`` federated mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.simple import Classifier
+
+# leaf names eligible for adaptation: every zoo attention/MLP projection,
+# plus the dense/conv kernels of the simple models
+LORA_TARGETS = ("w", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+# ---------------------------------------------------------------------------
+# path helpers (mirror tree_map_with_path's '/'-joined naming)
+# ---------------------------------------------------------------------------
+
+
+def _iter_leaves(tree, prefix=()):
+    """Yield (path, leaf) depth-first with deterministic (sorted-key) order —
+    the same order jax uses when flattening dicts."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _iter_leaves(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_leaves(v, prefix + (str(i),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _get(tree, parts):
+    node = tree
+    for p in parts:
+        node = node[int(p)] if isinstance(node, (list, tuple)) else node[p]
+    return node
+
+
+def _set(tree, parts, value):
+    """Copy-on-write functional set along ``parts``."""
+    head, rest = parts[0], parts[1:]
+    if isinstance(tree, dict):
+        new = dict(tree)
+        new[head] = value if not rest else _set(tree[head], rest, value)
+        return new
+    i = int(head)
+    seq = list(tree)
+    seq[i] = value if not rest else _set(seq[i], rest, value)
+    return tuple(seq) if isinstance(tree, tuple) else seq
+
+
+# ---------------------------------------------------------------------------
+# adapter construction
+# ---------------------------------------------------------------------------
+
+
+def _target_paths(base_params, targets) -> list[str]:
+    return [path for path, leaf in _iter_leaves(base_params)
+            if path.split("/")[-1] in targets
+            and getattr(leaf, "ndim", 0) >= 2]
+
+
+def _leaf_rank(leaf, rank) -> int:
+    d_in = leaf.shape[-2]
+    return d_in if rank == "full" else min(int(rank), d_in)
+
+
+def _init_a(rng, leaf, r, kind):
+    lead, d_in = leaf.shape[:-2], leaf.shape[-2]
+    if kind == "identity":
+        if r != d_in:
+            raise ValueError("init_a='identity' needs rank == d_in "
+                             f"(got r={r}, d_in={d_in})")
+        return jnp.broadcast_to(jnp.eye(d_in, dtype=jnp.float32),
+                                lead + (d_in, d_in))
+    std = d_in ** -0.5
+    return std * jax.random.normal(rng, lead + (d_in, r), dtype=jnp.float32)
+
+
+def lora_classifier(base: Classifier, base_rng, rank, *,
+                    alpha: float | None = None,
+                    freeze_base: bool = True,
+                    targets: tuple = LORA_TARGETS,
+                    train_a: bool = True,
+                    init_a: str = "normal") -> Classifier:
+    """Wrap ``base`` so only LoRA factors (and, with ``freeze_base=False``,
+    the non-adapted leaves) are trainable.
+
+    rank: positive int, or ``"full"`` for per-leaf rank = d_in (with
+        ``init_a="identity"``/``train_a=False``/``alpha=None`` this makes the
+        wrapped model's SGD trajectory reproduce the dense path exactly).
+    alpha: LoRA scale numerator; effective scale is ``alpha / r`` per leaf
+        (``None`` → scale 1.0).
+    train_a: with ``False`` the A factors are drawn once at wrap time and
+        frozen; only B (and base leaves) remain trainable.
+    """
+    if rank != "full" and (not isinstance(rank, int) or rank < 1):
+        raise ValueError(f"rank must be a positive int or 'full', got {rank!r}")
+    if init_a not in ("normal", "identity"):
+        raise ValueError(f"unknown init_a {init_a!r}")
+
+    base_params = base.init(base_rng)
+    paths = _target_paths(base_params, targets)
+    if not paths:
+        raise ValueError(f"no adaptable leaves named {targets} in "
+                         f"{base.name!r}")
+    leaves = {p: _get(base_params, p.split("/")) for p in paths}
+    ranks = {p: _leaf_rank(leaves[p], rank) for p in paths}
+    scales = {p: (1.0 if alpha is None else float(alpha) / ranks[p])
+              for p in paths}
+    frozen_paths = frozenset(paths)
+
+    frozen_a = None
+    if not train_a:
+        a_rng = jax.random.fold_in(base_rng, 1)
+        frozen_a = {p: _init_a(jax.random.fold_in(a_rng, i), leaves[p],
+                               ranks[p], init_a)
+                    for i, p in enumerate(paths)}
+
+    def init(rng):
+        adapters = {}
+        for i, p in enumerate(paths):
+            leaf = leaves[p]
+            r = ranks[p]
+            d_out = leaf.shape[-1]
+            ab = {"lora_b": jnp.zeros(leaf.shape[:-2] + (r, d_out),
+                                      dtype=jnp.float32)}
+            if train_a:
+                ab["lora_a"] = _init_a(jax.random.fold_in(rng, i), leaf,
+                                       r, init_a)
+            adapters[p] = ab
+        out = {"lora": adapters}
+        if not freeze_base:
+            out["base"] = {p: l for p, l in _iter_leaves(base_params)
+                           if p not in frozen_paths}
+        return out
+
+    def apply(p, x):
+        eff = base_params
+        for path, leaf in p.get("base", {}).items():
+            eff = _set(eff, path.split("/"), leaf)
+        for path, ab in p["lora"].items():
+            a = ab["lora_a"] if train_a else frozen_a[path]
+            w = _get(eff, path.split("/"))
+            delta = jnp.einsum("...ir,...ro->...io", a, ab["lora_b"])
+            eff = _set(eff, path.split("/"),
+                       w + (scales[path] * delta).astype(w.dtype))
+        return base.apply(eff, x)
+
+    return Classifier(f"lora[{base.name}]", init, apply)
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+
+def lora_report(base_params, trainable_params) -> dict:
+    """Dense-vs-adapter size accounting: ``p_trainable`` is what the
+    federated engine trains and the HistoryStore remembers per client,
+    ``p_dense`` is the frozen base the adapters ride on."""
+    from repro.utils.pytree import tree_bytes, tree_count_params
+
+    p_dense = tree_count_params(base_params)
+    p_trainable = tree_count_params(trainable_params)
+    return {"p_dense": p_dense,
+            "p_trainable": p_trainable,
+            "trainable_bytes": tree_bytes(trainable_params),
+            "trainable_frac": p_trainable / max(p_dense, 1)}

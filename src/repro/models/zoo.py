@@ -1,0 +1,89 @@
+"""Zoo models behind the federated ``Classifier`` interface.
+
+The federated engine consumes ``Classifier(name, init, apply)`` and vmaps
+``apply`` over a client axis; the zoo (decoder / MoE / xLSTM stacks in
+``models/decoder.py``) speaks token batches. This adapter bridges the two:
+float feature vectors are discretized into a token sequence (one token per
+feature, sigmoid-binned into the vocab), run through ``run_segments`` in
+train mode, and the last position's logits — tied-embedding head restricted
+to the first ``n_classes`` vocab columns — are the classification output.
+
+``sharding.api.constrain`` is the identity without an installed context, so
+the same apply runs unsharded inside the federated vmap on CPU tests and
+sharded under a launcher-installed mesh.
+
+These are NOT meant to be federated densely: wrap them with
+:func:`repro.models.lora.lora_classifier` (spec v7 requires ``lora_rank>=1``
+for zoo models) so clients train/ship only the adapter subtree.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ArchConfig, MoEConfig, Segment
+from repro.models.decoder import lm_heads, model_init, run_segments
+from repro.models.simple import Classifier
+
+ZOO_KINDS = ("decoder", "moe", "xlstm")
+
+
+def zoo_arch_config(kind: str, *, width: int = 4, n_layers: int = 2,
+                    vocab: int = 64) -> ArchConfig:
+    """Tiny-but-real ArchConfig per zoo kind; ``d_model = 8 * width`` so the
+    spec's existing ``width`` knob scales the stack (width 4 → d_model 32
+    smoke configs, width 32 → d_model 256, ≈1.4M params)."""
+    d = 8 * width
+    common = dict(n_heads=2, n_kv_heads=2, head_dim=d // 2, vocab=vocab,
+                  compute_dtype="float32", remat=False)
+    if kind == "decoder":
+        return ArchConfig(
+            name=f"fed-decoder-{d}", arch_type="dense", d_model=d, d_ff=2 * d,
+            segments=(Segment(n_layers, ("attn",)),), **common)
+    if kind == "moe":
+        # group_size >= any batch*seq we see -> a single dispatch group, so
+        # token counts never need to divide the group size
+        return ArchConfig(
+            name=f"fed-moe-{d}", arch_type="moe", d_model=d, d_ff=2 * d,
+            segments=(Segment(n_layers, ("attn",)),), ffn_kind="moe",
+            moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=d,
+                          capacity_factor=2.0, group_size=65536),
+            **common)
+    if kind == "xlstm":
+        return ArchConfig(
+            name=f"fed-xlstm-{d}", arch_type="ssm", d_model=d, d_ff=2 * d,
+            segments=(Segment(n_layers, ("mlstm",)),), ffn_kind="none",
+            **common)
+    raise ValueError(f"unknown zoo kind {kind!r}; expected one of {ZOO_KINDS}")
+
+
+def make_zoo_classifier(kind: str, *, input_shape, n_classes: int,
+                        width: int = 4, n_layers: int = 2,
+                        vocab: int = 64) -> Classifier:
+    vocab = max(vocab, n_classes)
+    cfg = zoo_arch_config(kind, width=width, n_layers=n_layers, vocab=vocab)
+
+    def tokens_of(x):
+        f = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        bins = jnp.floor(_sigmoid(f) * cfg.vocab)
+        return jnp.clip(bins, 0, cfg.vocab - 1).astype(jnp.int32)
+
+    def init(rng):
+        return model_init(rng, cfg)
+
+    def apply(p, x):
+        toks = tokens_of(x)
+        h = nn.embedding_apply(p["embed"], toks)
+        positions = jnp.arange(toks.shape[1], dtype=jnp.int32)
+        h, _, _ = run_segments(p, cfg, h.astype(jnp.float32), positions,
+                               None, mode="train")
+        h = nn.rmsnorm_apply(p["final_norm"], h)
+        heads = lm_heads(p, cfg).astype(jnp.float32)
+        logits = h[:, -1].astype(jnp.float32) @ heads
+        return logits[:, :n_classes]
+
+    return Classifier(f"zoo-{kind}", init, apply)
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))

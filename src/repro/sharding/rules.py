@@ -70,6 +70,10 @@ _PARAM_AXES: dict[str, tuple] = {
     # norms / scalars
     "scale": (None,),
     "bias": (None,),
+    # LoRA adapter factors (repro.models.lora); the rank dim carries the
+    # 'lora' logical axis -> tensor-parallel over 'model'
+    "lora_a": ("embed", "lora"),
+    "lora_b": ("lora", "embed"),
 }
 
 # MoE expert tensors are disambiguated by rank (they live under 'ffn' too)
@@ -170,6 +174,20 @@ def make_rules(*, multi_pod: bool, mode: str,
     else:
         rules["seq"] = []
     return rules
+
+
+def make_fed_rules() -> dict[str, Rule]:
+    """Logical→mesh table for the 2-D ``("clients", "model")`` federated
+    mesh (:func:`repro.launch.mesh.make_fed_mesh`): stacked per-client
+    adapter trees shard their leading dim over ``clients`` and the LoRA
+    rank dim over ``model``; every other logical axis stays replicated —
+    the bulk O(r·d) factor dims are what the client axis already splits.
+    """
+    return {
+        "clients": ["clients"],
+        "lora": ["model"],
+        "kv_lora": ["model"],
+    }
 
 
 def batch_pspecs(ctx: ShardingContext, batch: dict):

@@ -52,6 +52,10 @@ PROFILE_ROW_KEYS = ("budget", "flops_rate", "train_cost", "harvest",
                     "capacity", "init_energy", "load_mean", "load_rho",
                     "load_jitter", "duty_period", "duty_on")
 
+#: device-profile kinds accepted by :func:`make_profile` — the spec/CLI
+#: ``choices`` derive from this tuple
+PROFILE_KINDS = ("budget", "uniform")
+
 
 @dataclass(frozen=True)
 class DeviceProfile:
@@ -114,7 +118,7 @@ def make_profile(kind: str, p, *, capacity: float = 4.0,
         harvest = np.ones(n)
     else:
         raise ValueError(f"unknown device profile kind {kind!r}; "
-                         "available: budget, uniform")
+                         f"available: {', '.join(PROFILE_KINDS)}")
     if capacity <= 0:
         raise ValueError(f"capacity must be > 0, got {capacity}")
     if not 0 <= load_mean <= _LOAD_MAX:

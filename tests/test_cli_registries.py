@@ -1,0 +1,70 @@
+"""CLI choices must be derived from the owning registries (ISSUE 10
+satellite): a newly registered strategy/executor/kind must be reachable
+from ``python -m repro`` without touching the CLI — duplicated literals
+silently drift.
+"""
+import pytest
+
+from repro.api import spec as spec_mod
+from repro.api.cli import build_parser
+from repro.core.budget import POLICY_KINDS
+from repro.core.channel import CHANNEL_KINDS
+from repro.core.history_store import STORE_KINDS
+from repro.core.rounds import COMPRESS_KINDS, EXECUTORS
+from repro.core.strategies import available_strategies
+from repro.system.devices import PROFILE_KINDS
+
+
+def _flag_choices(sub: str):
+    ap = build_parser()
+    sub_actions = next(a for a in ap._actions
+                       if hasattr(a, "choices") and sub in (a.choices or {}))
+    parser = sub_actions.choices[sub]
+    return {a.option_strings[0]: a.choices for a in parser._actions
+            if a.option_strings and a.choices is not None}
+
+
+_REGISTRY_FLAGS = {
+    "--strategy": tuple(available_strategies()),
+    "--executor": tuple(EXECUTORS),
+    "--channel": tuple(CHANNEL_KINDS),
+    "--policy": tuple(POLICY_KINDS),
+    "--device-profile": tuple(PROFILE_KINDS),
+    "--compress": tuple(COMPRESS_KINDS),
+    "--history-store": tuple(STORE_KINDS),
+}
+
+
+@pytest.mark.parametrize("sub", ("run", "sweep"))
+@pytest.mark.parametrize("flag", sorted(_REGISTRY_FLAGS))
+def test_cli_choices_match_registry(sub, flag):
+    choices = _flag_choices(sub)
+    assert flag in choices, f"{sub} is missing {flag}"
+    assert tuple(choices[flag]) == _REGISTRY_FLAGS[flag]
+
+
+def test_every_registry_strategy_is_spec_reachable():
+    """FedConfig accepts every registered strategy name — the CLI's
+    --strategy choices and the engine agree on the registry."""
+    from repro.core.rounds import FedConfig
+    for name in available_strategies():
+        kw = {"fedprox": {"prox_mu": 0.1},
+              "feddyn": {"feddyn_alpha": 0.1}}.get(name, {})
+        FedConfig(strategy=name, **kw)
+
+
+def test_spec_choice_tables_are_the_registries():
+    """The spec's private choice tables alias the registries rather than
+    restating them."""
+    assert spec_mod._EXECUTORS is EXECUTORS
+    assert spec_mod._COMPRESS is COMPRESS_KINDS
+    assert spec_mod._DEVICE_PROFILES is PROFILE_KINDS
+
+
+def test_executor_flag_overrides_spec(tmp_path):
+    from repro.api.cli import _load_spec
+    from repro.api.spec import ExperimentSpec
+    path = str(tmp_path / "s.json")
+    ExperimentSpec(rounds=2, eval_every=1).save(path)
+    spec = _load_spec(path, [], executor="python")
+    assert spec.executor == "python"

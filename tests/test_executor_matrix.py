@@ -648,3 +648,58 @@ def test_aircomp_is_deterministic():
     for a, b in zip(jax.tree.leaves(sess.state["params"]),
                     jax.tree.leaves(params)):
         np.testing.assert_array_equal(np.asarray(a), b)
+
+
+# ---------------------------------------------------------------------------
+# zoo decoder cells (ISSUE 10 satellite): LoRA adapter federation on a
+# tiny transformer decoder through the production executors. The engine
+# never learns it is training adapters — the same 1e-5 oracle budget as
+# the simple-model matrix applies. Runs on 1 visible device under tier-1
+# and on 4 under the CI fed-lora-matrix job.
+# ---------------------------------------------------------------------------
+
+ZOO_EXECUTORS = ("scan", "sharded", "async")
+ZOO_STRATEGIES = ("cc", "fedavg", "fedprox")
+
+
+def _zoo_spec(strategy: str, executor: str) -> ExperimentSpec:
+    extra = dict(prox_mu=0.1) if strategy == "fedprox" else {}
+    return ExperimentSpec(
+        dataset="gaussian", n_samples=128, dim=8, n_classes=4,
+        n_clients=N, budget="power", beta=2, model="decoder", width=2,
+        lora_rank=4, strategy=strategy, local_steps=2, batch_size=16,
+        lr=0.1, schedule="adhoc", rounds=4, eval_every=2, seed=0,
+        executor=executor, **extra)
+
+
+_ZOO_RUNS: dict = {}
+
+
+def _zoo_run(strategy: str, executor: str):
+    key = (strategy, executor)
+    if key not in _ZOO_RUNS:
+        sess = Session.from_spec(_zoo_spec(strategy, executor)).run()
+        _ZOO_RUNS[key] = (jax.tree.map(np.asarray, sess.state["params"]),
+                          sess.metrics.series("test_acc"))
+    return _ZOO_RUNS[key]
+
+
+@pytest.mark.parametrize("strategy", ZOO_STRATEGIES)
+@pytest.mark.parametrize("executor", ZOO_EXECUTORS)
+def test_zoo_decoder_matrix_matches_python_oracle(executor, strategy):
+    oracle_params, oracle_accs = _zoo_run(strategy, "python")
+    params, accs = _zoo_run(strategy, executor)
+    np.testing.assert_allclose(accs, oracle_accs, atol=ATOL,
+                               err_msg=f"decoder/{executor}/{strategy} "
+                                       "metric stream diverged")
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(oracle_params)):
+        np.testing.assert_allclose(a, b, atol=ATOL,
+                                   err_msg=f"decoder/{executor}/{strategy}")
+
+
+def test_zoo_decoder_trains_only_adapters():
+    params, _ = _zoo_run("cc", "scan")
+    assert set(params) == {"lora"}
+    assert all(set(ab) == {"lora_a", "lora_b"}
+               for ab in params["lora"].values())

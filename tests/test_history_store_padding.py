@@ -1,0 +1,137 @@
+"""HistoryStore tile-padding regressions (ISSUE 10 satellite).
+
+The store's row width is padded to the 512-lane TILE; every flat parameter
+count that is NOT a tile multiple (prime, < 512, == 1) must round-trip
+through gather/scatter and masked writes without bit drift:
+
+* the padded tail quantizes to payload 0 and stays exactly zero through
+  arbitrarily many write round-trips;
+* unmasked rows keep their stored bits verbatim (no requantization drift);
+* ``read_logical`` crops back to exactly the pre-padding columns.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.history_store import TILE, HistoryStore, padded_width
+
+N = 6
+
+#: widths that historically only worked by accident of P % 512 == 0:
+#: P = 1, tiny, prime < TILE, prime > TILE, and an exact multiple
+WIDTHS = (1, 7, 509, 521, 1024)
+
+
+def _rows(seed, p):
+    return jax.random.normal(jax.random.PRNGKey(seed), (N, p),
+                             dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("kind", ("dense", "int8"))
+@pytest.mark.parametrize("p", WIDTHS)
+def test_for_flat_geometry(kind, p):
+    store = HistoryStore.for_flat(N, p, kind)
+    assert store.width == padded_width(p)
+    assert store.width % TILE == 0
+    assert store.p_logical == p
+    carry = store.init()
+    store.like(carry)
+    out = store.read_logical(carry)
+    assert out.shape == (N, p)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("kind", ("dense", "int8"))
+@pytest.mark.parametrize("p", WIDTHS)
+def test_masked_write_round_trip(kind, p):
+    store = HistoryStore.for_flat(N, p, kind)
+    carry = store.init()
+    rows = _rows(0, p)
+    mask = jnp.arange(N) % 2 == 0
+    carry = store.write(carry, mask, store.pad_rows(rows))
+
+    got = np.asarray(store.read_logical(carry))
+    want = np.asarray(rows)
+    m = np.asarray(mask)
+    if kind == "dense":
+        np.testing.assert_array_equal(got[m], want[m])
+    else:
+        # per-row symmetric int8: error <= scale/2 on written rows
+        scale = np.abs(np.asarray(store.pad_rows(rows))).max(axis=1) / 127.0
+        err = np.abs(got[m] - want[m])
+        assert (err <= scale[m][:, None] * 0.5 * (1 + 1e-5)).all()
+    # unmasked rows stay exactly zero
+    np.testing.assert_array_equal(got[~m], 0.0)
+    # the padded tail is exactly zero — in bits, not just approximately
+    full = np.asarray(store.read(carry))
+    np.testing.assert_array_equal(full[:, p:], 0.0)
+    if kind == "int8":
+        np.testing.assert_array_equal(
+            np.asarray(carry["payload"])[:, p:], 0)
+
+
+@pytest.mark.parametrize("kind", ("dense", "int8"))
+@pytest.mark.parametrize("p", (1, 7, 509, 521))
+def test_unmasked_rows_keep_bits_across_writes(kind, p):
+    """A second write with a disjoint mask must not perturb previously
+    written rows — the masked-`where` keeps stored bits verbatim."""
+    store = HistoryStore.for_flat(N, p, kind)
+    carry = store.init()
+    mask_a = jnp.arange(N) % 2 == 0
+    carry = store.write(carry, mask_a, store.pad_rows(_rows(0, p)))
+    before = {k: np.asarray(v).copy() for k, v in carry.items()}
+
+    carry = store.write(carry, ~mask_a, store.pad_rows(_rows(1, p)))
+    m = np.asarray(mask_a)
+    for k, v in carry.items():
+        row_bits = np.asarray(v)
+        np.testing.assert_array_equal(row_bits[m], before[k][m],
+                                      err_msg=f"{kind}/{k} rows drifted")
+
+
+@pytest.mark.parametrize("kind", ("dense", "int8"))
+@pytest.mark.parametrize("p", (1, 7, 509, 521))
+def test_scatter_gather_round_trip(kind, p):
+    store = HistoryStore.for_flat(N, p, kind)
+    carry = store.write(store.init(), jnp.ones(N, bool),
+                        store.pad_rows(_rows(0, p)))
+    before = {k: np.asarray(v).copy() for k, v in carry.items()}
+
+    idx = jnp.asarray([0, 3])
+    new = _rows(1, 2 * p)[:2, :p]
+    carry = store.scatter(carry, idx, store.pad_rows(new))
+
+    got = np.asarray(store.read_logical(carry, idx))
+    want = np.asarray(new)
+    if kind == "dense":
+        np.testing.assert_array_equal(got, want)
+    else:
+        scale = np.abs(want).max(axis=1) / 127.0
+        assert (np.abs(got - want)
+                <= scale[:, None] * 0.5 * (1 + 1e-5) + 1e-12).all()
+        np.testing.assert_array_equal(np.asarray(carry["payload"])[:, p:], 0)
+    # rows outside the cohort keep their bits
+    rest = np.asarray([i for i in range(N) if i not in (0, 3)])
+    for k, v in carry.items():
+        np.testing.assert_array_equal(np.asarray(v)[rest], before[k][rest])
+
+
+def test_pad_rows_rejects_wider_rows():
+    store = HistoryStore.for_flat(N, 7, "dense")
+    with pytest.raises(ValueError, match="wider"):
+        store.pad_rows(jnp.zeros((N, store.width + 1)))
+
+
+def test_pad_rows_noop_at_tile_multiple():
+    store = HistoryStore.for_flat(N, TILE, "dense")
+    rows = _rows(0, TILE)
+    assert store.pad_rows(rows) is rows
+    assert store.width == TILE
+
+
+def test_logical_width_validation():
+    with pytest.raises(ValueError, match="logical_width"):
+        HistoryStore(N, TILE, "dense", logical_width=TILE + 1)
+    with pytest.raises(ValueError, match="logical_width"):
+        HistoryStore(N, TILE, "dense", logical_width=0)

@@ -103,3 +103,43 @@ def test_quantize_tree_handles_scalar_and_zero_leaves():
     # all-zero leaves dequantize to EXACT zeros (scale floor never
     # manufactures a payload)
     assert not np.asarray(back["z"]).any()
+
+
+# ---------------------------------------------------------------------------
+# bf16-params round trip (ISSUE 10 satellite): dequantize computes the
+# payload·scale product in f32 and rounds ONCE to the param dtype. A
+# double-rounding order — (payload * scale) rounded to bf16 per factor, or
+# f32→bf16→f32 chains — would exceed the analytic bound below; the single
+# extra bf16 rounding adds at most |v|·2⁻⁸ (half an ulp at 8 significand
+# bits) on top of the scale/2 quantization error.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 8), p=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 16),
+       scale=st.floats(min_value=1e-5, max_value=1e3))
+def test_bf16_round_trip_single_rounding(n, p, seed, scale):
+    x = _rows(n, p, seed, scale).astype(jnp.bfloat16)
+    payload, scales = quantize_rows(x)        # f32 cast of bf16 is exact
+    back = dequantize_rows(payload, scales, dtype=jnp.bfloat16)
+    assert back.dtype == jnp.bfloat16
+    exact_f32 = np.asarray(payload, np.float32) * np.asarray(scales)[:, None]
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(back, np.float32))
+    bound = (np.asarray(scales)[:, None] * 0.5
+             + np.abs(exact_f32) * 2.0 ** -8) * _SLACK
+    assert (err <= bound).all()
+
+
+def test_bf16_tree_round_trip_single_rounding():
+    from repro.core.compress import dequantize_tree, quantize_tree
+    tree = {"w": (3.0 * jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+                  ).astype(jnp.bfloat16)}
+    q = quantize_tree(tree)
+    back = dequantize_tree(q, dtype=jnp.bfloat16)
+    assert back["w"].dtype == jnp.bfloat16
+    s = float(q.scales["w"])
+    exact = np.asarray(q.payload["w"], np.float32) * s
+    err = np.abs(np.asarray(tree["w"], np.float32)
+                 - np.asarray(back["w"], np.float32))
+    assert (err <= (s * 0.5 + np.abs(exact) * 2.0 ** -8) * _SLACK).all()
